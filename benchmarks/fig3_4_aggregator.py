@@ -1,0 +1,70 @@
+"""Paper Figs. 3 & 4: floating-aggregator dynamics — data/rate distribution
+across DC subnetworks, CE-FL's aggregator switching vs datapoint-greedy and
+rate-greedy, and delay/energy vs fixed-aggregator baselines."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, csv_line, setup
+from repro.core import CEFLOptions, run_cefl
+from repro.solver.greedy import e2e_rate, subnet_datapoints
+
+
+def main():
+    s = setup("fmnist")
+    net = s["net"]
+    rounds = min(8, s["sizes"]["rounds"])
+    t0 = time.time()
+    results = {}
+    for strat in ("cefl", "greedy_data", "greedy_rate", "fixed:0"):
+        opts = CEFLOptions(rounds=rounds, strategy=strat, eta=0.1,
+                           solver_outer=2, reoptimize_every=1, seed=0)
+        results[strat] = run_cefl(
+            net, s["make_ues"](drift_labels=True), init_params=s["p0"],
+            loss_fn=s["loss_fn"], eval_fn=s["eval_fn"], consts=s["consts"],
+            ow=s["ow"], opts=opts)
+
+    print("\n== Fig. 3: aggregator switching pattern ==")
+    print("round | " + " | ".join(f"{k:12s}" for k in results))
+    for t in range(rounds):
+        print(f"{t:5d} | " + " | ".join(
+            f"DC{results[k]['aggregator'][t]:<10d}" for k in results))
+    switches = {k: sum(1 for a, b in zip(v["aggregator"], v["aggregator"][1:])
+                       if a != b) for k, v in results.items()}
+    print("switches:", switches)
+
+    # data concentration snapshot (Fig. 3a)
+    ues = s["make_ues"](drift_labels=True, seed_off=5)
+    D_bar = np.array([len(ds.step()["y"]) for ds in ues], float)
+    print("datapoints per DC subnet:", subnet_datapoints(net, D_bar))
+    print("mean E2E rate per DC (Gbps):",
+          np.round(e2e_rate(net).mean(0) / 1e9, 3))
+
+    print("\n== Fig. 4: delay & energy vs aggregation strategy ==")
+    fixed_E, fixed_D = [], []
+    for sdx in range(net.cfg.num_dc):
+        opts = CEFLOptions(rounds=3, strategy=f"fixed:{sdx}", eta=0.1,
+                           reoptimize_every=1, seed=0)
+        h = run_cefl(net, s["make_ues"](seed_off=sdx), init_params=s["p0"],
+                     loss_fn=s["loss_fn"], eval_fn=s["eval_fn"],
+                     consts=s["consts"], ow=s["ow"], opts=opts)
+        fixed_E.append(h["cum_energy"][-1] / 3)
+        fixed_D.append(h["cum_delay"][-1] / 3)
+    per_round = {k: (v["cum_energy"][-1] / rounds,
+                     v["cum_delay"][-1] / rounds) for k, v in results.items()}
+    print(f"{'strategy':12s} {'energy/round':>14s} {'delay/round':>12s}")
+    for k, (e, d) in per_round.items():
+        print(f"{k:12s} {e:13.2f}J {d:11.2f}s")
+    print(f"{'fixed(avg)':12s} {np.mean(fixed_E):13.2f}J "
+          f"{np.mean(fixed_D):11.2f}s")
+    elapsed = time.time() - t0
+    csv_line("fig3_aggregator_switches", elapsed * 1e6,
+             f"cefl_switches={switches['cefl']}")
+    csv_line("fig4_energy_savings_vs_fixed", elapsed * 1e6,
+             f"{100*(1-per_round['cefl'][0]/max(np.mean(fixed_E),1e-9)):.1f}%")
+
+
+if __name__ == "__main__":
+    main()

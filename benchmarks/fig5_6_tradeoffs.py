@@ -1,0 +1,64 @@
+"""Paper Figs. 5 & 6: (5) model-drift vs global-aggregation delay and UE CPU
+frequency; (6) ML-performance weight xi1 vs mini-batch ratios and energy.
+Both are solver ablations (Sec. VI-B3/4): sweep one knob, re-solve P, report
+the optimized orchestration variables."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, csv_line, setup
+from repro.network.costs import network_costs, round_energy
+from repro.solver import sca
+
+
+def main():
+    s = setup("fmnist")
+    net, consts, ow0 = s["net"], s["consts"], s["ow"]
+    N = net.cfg.num_ue
+    rng = np.random.RandomState(0)
+    D_bar = rng.normal(s["sizes"]["mean_arrivals"],
+                       s["sizes"]["mean_arrivals"] / 10, N).clip(100)
+    outer = 3 if QUICK else 8
+
+    t0 = time.time()
+    print("\n== Fig. 5: drift vs delay / CPU frequency ==")
+    print(f"{'drift':>6s} {'delta_A+R (s)':>14s} {'mean f_n (GHz)':>15s}")
+    drift_rows = []
+    for drift in (0.05, 0.3, 1.0, 3.0):
+        ow = dataclasses.replace(ow0, drift=drift)
+        res = sca.solve(net, D_bar, consts, ow, distributed=False,
+                        max_outer=outer)
+        w = res.w_rounded
+        delay = float(w["delta_A"] + w["delta_R"])
+        fmean = float(np.mean(np.asarray(w["f_n"]))) / 1e9
+        drift_rows.append((drift, delay, fmean))
+        print(f"{drift:6.2f} {delay:14.2f} {fmean:15.3f}")
+    # paper: higher drift -> faster rounds (lower delay), faster CPUs
+    monotone_delay = drift_rows[0][1] >= drift_rows[-1][1]
+    monotone_freq = drift_rows[0][2] <= drift_rows[-1][2]
+
+    print("\n== Fig. 6: xi1 (ML weight) vs mini-batch ratio / energy ==")
+    print(f"{'xi1':>8s} {'mean m_i':>9s} {'round energy (J)':>17s}")
+    xi_rows = []
+    for xi1 in (0.01, 0.1, 1.0, 10.0):
+        ow = dataclasses.replace(ow0, xi1=xi1)
+        res = sca.solve(net, D_bar, consts, ow, distributed=False,
+                        max_outer=outer)
+        w = res.w_rounded
+        m_mean = float(np.mean(np.asarray(w["m"])))
+        E = float(round_energy(network_costs(w, net, D_bar), ow.xi3_sub))
+        xi_rows.append((xi1, m_mean, E))
+        print(f"{xi1:8.2f} {m_mean:9.3f} {E:17.2f}")
+    elapsed = time.time() - t0
+    csv_line("fig5_drift_tradeoff", elapsed * 1e6 / 8,
+             f"delay_monotone={monotone_delay},freq_monotone={monotone_freq}")
+    csv_line("fig6_xi1_tradeoff", elapsed * 1e6 / 8,
+             f"m({xi_rows[0][0]})={xi_rows[0][1]:.3f},"
+             f"m({xi_rows[-1][0]})={xi_rows[-1][1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Microbenchmarks (wall-clock on the local device): CE-FL round step on a
+small LM, FedProx kernel vs unfused XLA, decode step latency."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line
+from repro.configs import get_config, reduced
+from repro.core.round_step import CEFLHyper, build_cefl_round_step, \
+    make_dpu_meta
+from repro.data import make_token_batches
+from repro.kernels import ops, ref
+from repro.models import lm as L
+
+
+def _timeit(fn, n=10):
+    fn()  # warmup/compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6     # us
+
+
+def bench_round_step():
+    cfg = reduced(get_config("mamba2-130m"))
+    params0 = L.init_lm_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), params0)
+
+    def loss_fn(p, micro, mask):
+        return L.lm_loss(p, cfg, micro, example_mask=mask, remat=True,
+                         q_block=64, kv_block=64)
+
+    step = jax.jit(build_cefl_round_step(
+        loss_fn, CEFLHyper(gamma_max=2, n_micro=1)))
+    meta = make_dpu_meta(2, gammas=[2, 2])
+    b = make_token_batches(cfg.vocab_size, 2, 1, 2, 128)
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    us = _timeit(lambda: step(params, b, meta)[1]["loss"], n=5)
+    csv_line("cefl_round_step_smoke_lm", us, "gamma=2,n_dpu=2,seq=128")
+
+
+def bench_fedprox_kernel():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2048, 1024))
+    g = x * 0.1
+    a = x * 0.9
+
+    kern = jax.jit(lambda x, g, a: ops.fedprox_update(
+        {"p": x}, {"p": g}, {"p": a}, 0.1, 0.01)["p"])
+    unfused = jax.jit(lambda x, g, a: ref.fedprox_update_ref(
+        x, g, a, 0.1, 0.01))
+    us_k = _timeit(lambda: kern(x, g, a))
+    us_u = _timeit(lambda: unfused(x, g, a))
+    csv_line("fedprox_kernel_interpret", us_k, f"unfused_xla={us_u:.1f}us")
+
+
+def bench_decode_step():
+    cfg = reduced(get_config("qwen3-32b"))
+    p = L.init_lm_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    cache = L.init_cache(cfg, 4, 512, jnp.float32)
+    tok = jnp.zeros((4,), jnp.int32)
+    step = jax.jit(lambda t, c: L.lm_decode_step(p, cfg, t, c))
+    us = _timeit(lambda: step(tok, cache)[0], n=10)
+    csv_line("decode_step_smoke_qwen3", us, "B=4,cache=512")
+
+
+def main():
+    bench_round_step()
+    bench_fedprox_kernel()
+    bench_decode_step()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""§Perf hillclimbing harness: named variants of the three chosen
+(arch x shape) pairs, re-lowered and re-analyzed; results ->
+results/perf/<pair>_<variant>.json.
+
+Each variant encodes one hypothesis from EXPERIMENTS.md §Perf (napkin math
+and verdicts live there; this script only executes and records).
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations [pair ...]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json
+import sys
+from pathlib import Path
+
+from repro.launch.dryrun import dryrun_combo
+
+# variant -> kwargs for dryrun_combo.  "baseline" = paper-faithful naive
+# sharding (attention layout left to GSPMD), as recorded in the §Dry-run
+# baseline table.
+VARIANTS = {
+    "llama3_train": [
+        ("baseline", dict(attn_hint=False)),
+        ("attn_shard", dict()),
+        ("attn_shard_micro8_remat14", dict(plan_overrides=dict(
+            n_micro=8, remat_chunk=14))),
+        ("attn_shard_micro4_remat18", dict(plan_overrides=dict(
+            n_micro=4, remat_chunk=18))),
+    ],
+    "whisper_train": [
+        ("baseline", dict(attn_hint=False)),
+        ("attn_shard", dict()),
+        ("attn_shard_micro4", dict(plan_overrides=dict(n_micro=4))),
+        ("attn_shard_micro4_gamma4", dict(gamma_max=4,
+                                          plan_overrides=dict(n_micro=4))),
+    ],
+    "mamba2_train": [
+        ("baseline", dict(attn_hint=False)),
+        ("embed_replicated", dict(attn_hint=False, plan_overrides=dict(
+            embed_replicated=True))),           # hypothesis REFUTED
+        ("ssm_shard", dict()),                  # batch->data on SSD acts
+        ("ssm_shard_micro4", dict(plan_overrides=dict(n_micro=4))),
+        ("ssm_shard_gamma4", dict(gamma_max=4)),
+    ],
+}
+
+PAIRS = {
+    "llama3_train": ("llama3-405b", "train_4k", False),
+    "whisper_train": ("whisper-medium", "train_4k", False),
+    "mamba2_train": ("mamba2-130m", "train_4k", False),
+}
+
+
+def main():
+    which = sys.argv[1:] or list(PAIRS)
+    outdir = Path("results/perf")
+    outdir.mkdir(parents=True, exist_ok=True)
+    for pair in which:
+        arch, shape, mp = PAIRS[pair]
+        for vname, kw in VARIANTS[pair]:
+            path = outdir / f"{pair}_{vname}.json"
+            if path.exists():
+                print(f"[cached] {pair}/{vname}")
+                continue
+            print(f"== {pair} / {vname} ==")
+            rec = dryrun_combo(arch, shape, multi_pod=mp, verbose=True,
+                               **kw)
+            rec["variant"] = vname
+            path.write_text(json.dumps(rec, indent=1))
+        # summary
+        print(f"\n-- {pair} summary --")
+        for vname, _ in VARIANTS[pair]:
+            rec = json.loads((outdir / f"{pair}_{vname}.json").read_text())
+            c = rec["chips"]
+            comp = rec["flops"] / (c * 197e12)
+            mem = rec["bytes_accessed"] / (c * 819e9)
+            coll = rec["collective_bytes"] / (c * 50e9)
+            print(f"{vname:28s} compute {comp:9.2f}s  memory {mem:9.2f}s  "
+                  f"coll {coll:8.2f}s  HBM/dev "
+                  f"{rec['bytes_per_device']/1e9:6.1f}G  "
+                  f"model/hlo {rec['model_flops']/rec['flops']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Roofline report builder: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and emits the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.utils.roofline import Roofline
+
+
+def load_rows(outdir="results/dryrun", mesh="16x16"):
+    rows = []
+    for f in sorted(Path(outdir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") == "skipped":
+            rows.append(rec)
+            continue
+        if rec.get("status") != "ok" or (mesh and rec["mesh"] != mesh):
+            continue
+        rows.append(Roofline(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            chips=rec["chips"], hlo_flops=rec["flops"],
+            hlo_bytes=rec["bytes_accessed"],
+            coll_bytes=rec["collective_bytes"],
+            model_flops=rec["model_flops"],
+            bytes_per_device=rec.get("bytes_per_device", 0)).row())
+    return rows
+
+
+def fmt_table(rows):
+    hdr = (f"| {'arch':26s} | {'shape':11s} | {'compute_s':>9s} | "
+           f"{'memory_s':>9s} | {'collect_s':>9s} | {'dominant':>10s} | "
+           f"{'model/hlo':>9s} | {'HBM/dev':>8s} |")
+    lines = [hdr, "|" + "-" * (len(hdr) - 2) + "|"]
+    for r in rows:
+        if "compute_s" not in r:
+            lines.append(f"| {r['arch']:26s} | {r['shape']:11s} | "
+                         f"{'skipped: ' + r.get('reason', '')[:52]:s} |")
+            continue
+        lines.append(
+            f"| {r['arch']:26s} | {r['shape']:11s} | {r['compute_s']:9.4f} | "
+            f"{r['memory_s']:9.4f} | {r['collective_s']:9.4f} | "
+            f"{r['dominant']:>10s} | {r['useful_ratio']:9.3f} | "
+            f"{r['bytes_per_device']/1e9:7.1f}G |")
+    return "\n".join(lines)
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    for mesh in ("16x16", "2x16x16"):
+        rows = load_rows(outdir, mesh)
+        if rows:
+            print(f"\n### Roofline ({mesh}, {len(rows)} combos)\n")
+            print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV lines (plus human-readable tables).  QUICK=0 for the paper-sized runs.
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig3_4_aggregator, fig5_6_tradeoffs, fig7_solver,
+                            microbench, table1_2_energy_delay)
+    print("name,us_per_call,derived")
+    suites = [
+        ("microbench", microbench.main),
+        ("table1_2", table1_2_energy_delay.main),
+        ("fig3_4", fig3_4_aggregator.main),
+        ("fig5_6", fig5_6_tradeoffs.main),
+        ("fig7", fig7_solver.main),
+    ]
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:                      # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# suite {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,71 @@
+"""Paper Tables I & II: energy and delay to reach target accuracies —
+CE-FL vs FedNova vs FedAvg, on the F-MNIST-like and CIFAR-like synthetic
+tasks (targets re-based for the synthetic data; DESIGN.md §Assumptions).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, csv_line, setup
+from repro.core import CEFLOptions, run_cefl
+
+
+def first_reach(hist, targets):
+    out = {}
+    for tgt in targets:
+        idx = next((i for i, a in enumerate(hist["acc"]) if a >= tgt), None)
+        if idx is None:
+            out[tgt] = (float("nan"), float("nan"))
+        else:
+            out[tgt] = (hist["cum_energy"][idx], hist["cum_delay"][idx])
+    return out
+
+
+def run(dataset="fmnist", targets=(0.4, 0.5, 0.6), seed=0):
+    s = setup(dataset, seed)
+    rounds = s["sizes"]["rounds"]
+    rows = {}
+    t0 = time.time()
+    for strat in ("cefl", "fednova", "fedavg"):
+        opts = CEFLOptions(rounds=rounds, strategy=strat, eta=0.1,
+                           solver_outer=2 if QUICK else 4,
+                           reoptimize_every=3, seed=seed)
+        h = run_cefl(s["net"], s["make_ues"](), init_params=s["p0"],
+                     loss_fn=s["loss_fn"], eval_fn=s["eval_fn"],
+                     consts=s["consts"], ow=s["ow"], opts=opts)
+        rows[strat] = {"hist": h, "reach": first_reach(h, targets)}
+    elapsed = time.time() - t0
+    return rows, targets, elapsed
+
+
+def main():
+    for dataset in (("fmnist", "cifar") if not QUICK else ("fmnist",)):
+        rows, targets, elapsed = run(dataset)
+        print(f"\n== Tables I/II ({dataset}): energy (J) / delay (s) to "
+              f"target accuracy ==")
+        print(f"{'strategy':10s} " + "  ".join(f"acc>={t:.2f}" for t in targets)
+              + "   final_acc")
+        for strat, r in rows.items():
+            cells = []
+            for t in targets:
+                e, d = r["reach"][t]
+                cells.append(f"{e:8.1f}J/{d:7.1f}s")
+            print(f"{strat:10s} " + "  ".join(cells)
+                  + f"   {r['hist']['acc'][-1]:.3f}")
+        for t in targets:
+            e_c, d_c = rows["cefl"]["reach"][t]
+            e_n, d_n = rows["fednova"]["reach"][t]
+            if np.isfinite(e_c) and np.isfinite(e_n) and e_n > 0:
+                sav_e = 100 * (1 - e_c / e_n)
+                sav_d = 100 * (1 - d_c / d_n)
+                print(f"  vs FedNova savings @ {t:.2f}: "
+                      f"energy {sav_e:+.1f}%  delay {sav_d:+.1f}%")
+        csv_line(f"table1_energy_{dataset}", elapsed * 1e6 / 3,
+                 f"final_acc={rows['cefl']['hist']['acc'][-1]:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: CE-FL on a synthetic edge network in ~a minute on CPU.
+
+Builds a 6-UE / 3-BS / 2-DC network, streams non-iid online data to the UEs,
+lets the network-aware solver pick offloading + the floating aggregation DC
+each round, and trains the paper's image classifier cooperatively at UEs+DCs.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cefl_paper import ClassifierConfig
+from repro.core import CEFLOptions, MLConstants, run_cefl
+from repro.data import make_image_dataset, make_online_ues
+from repro.models.classifier import (classifier_accuracy, classifier_loss,
+                                     init_classifier_params)
+from repro.network import NetworkConfig, make_network
+from repro.solver import ObjectiveWeights
+
+
+def main():
+    net = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2))
+    (trx, tr_y), (tex, te_y) = make_image_dataset(6000, (14, 14, 1))
+    ues = make_online_ues(trx, tr_y, num_ue=6, mean_arrivals=300,
+                          std_arrivals=30)
+    cfg = ClassifierConfig(input_shape=(14, 14, 1), hidden=(64,))
+    p0 = init_classifier_params(jax.random.PRNGKey(0), cfg)
+    consts = MLConstants(L=5.0, theta_i=np.ones(8) * 2.0,
+                         sigma_i=np.ones(8) * 3.0, zeta1=2.0, zeta2=1.0)
+
+    hist = run_cefl(
+        net, ues, init_params=p0, loss_fn=classifier_loss,
+        eval_fn=lambda p: classifier_accuracy(
+            p, jnp.asarray(tex[:500]), jnp.asarray(te_y[:500])),
+        consts=consts, ow=ObjectiveWeights(),
+        opts=CEFLOptions(rounds=8, strategy="cefl", eta=0.1,
+                         solver_outer=2, reoptimize_every=4))
+
+    print("\nround  acc    aggregator  energy(J)  delay(s)")
+    for t in hist["round"]:
+        print(f"{t:5d}  {hist['acc'][t]:.3f}  DC{hist['aggregator'][t]:<9d} "
+              f"{hist['energy'][t]:9.2f} {hist['delay'][t]:9.2f}")
+    print(f"\nfinal accuracy {hist['acc'][-1]:.3f}; "
+          f"total energy {hist['cum_energy'][-1]:.1f} J, "
+          f"total delay {hist['cum_delay'][-1]:.1f} s")
+
+
+if __name__ == "__main__":
+    main()

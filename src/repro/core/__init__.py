@@ -1,0 +1,10 @@
+# The paper's primary contribution: CE-FL — cooperative edge-assisted
+# dynamic federated learning with an optimized floating aggregation point.
+from repro.core import (  # noqa: F401
+    aggregation, cefl, convergence, drift, estimation, fedprox, round_step,
+)
+from repro.core.cefl import CEFLOptions, run_cefl  # noqa: F401
+from repro.core.convergence import MLConstants  # noqa: F401
+from repro.core.round_step import (  # noqa: F401
+    CEFLHyper, build_cefl_round_step, make_dpu_meta,
+)

@@ -1,0 +1,66 @@
+"""Global aggregation at the floating aggregation DC (paper eq. 11).
+
+The aggregator receives scaled accumulated gradients D_i * d_i (BSs sum the
+gradients of their associated UEs first, Sec. II-D), sums them, and applies
+
+    x^{t+1} = x^t - (theta * eta / D^t) * sum_i D_i d_i.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def bs_relay_sum(scaled_gradients: Sequence, groups: Sequence[Sequence[int]]):
+    """Sum scaled gradients per BS group (keeps the uplink payload one model
+    wide per BS, Sec. II-D footnote 2).  Returns one summed pytree per group."""
+    out = []
+    for g in groups:
+        if not g:
+            continue
+        acc = scaled_gradients[g[0]]
+        for i in g[1:]:
+            acc = jax.tree_util.tree_map(jnp.add, acc, scaled_gradients[i])
+        out.append(acc)
+    return out
+
+
+def aggregate(x_t, d_list: List, weights: Sequence[float], *, theta: float,
+              eta: float):
+    """eq. (11).  weights: D_i (absolute dataset sizes); normalized inside."""
+    total = float(sum(weights))
+    acc = None
+    for d_i, D_i in zip(d_list, weights):
+        scaled = jax.tree_util.tree_map(lambda x: (D_i / total) * x, d_i)
+        acc = scaled if acc is None else jax.tree_util.tree_map(
+            jnp.add, acc, scaled)
+    return jax.tree_util.tree_map(lambda x, d: x - theta * eta * d, x_t, acc)
+
+
+def fedavg_aggregate(local_params: List, weights: Sequence[float]):
+    """Plain FedAvg: weighted average of local models."""
+    total = float(sum(weights))
+    acc = None
+    for p_i, D_i in zip(local_params, weights):
+        scaled = jax.tree_util.tree_map(lambda x: (D_i / total) * x, p_i)
+        acc = scaled if acc is None else jax.tree_util.tree_map(
+            jnp.add, acc, scaled)
+    return acc
+
+
+def fednova_aggregate(x_t, d_list: List, weights: Sequence[float],
+                      gammas: Sequence[float], *, eta: float):
+    """FedNova (Wang et al. 2020): x^{t+1} = x^t - eta * tau_eff * sum p_i d_i
+    with tau_eff = sum_i p_i gamma_i (momentum-free case)."""
+    total = float(sum(weights))
+    p = [w / total for w in weights]
+    tau_eff = sum(pi * gi for pi, gi in zip(p, gammas))
+    acc = None
+    for d_i, pi in zip(d_list, p):
+        scaled = jax.tree_util.tree_map(lambda x: pi * x, d_i)
+        acc = scaled if acc is None else jax.tree_util.tree_map(
+            jnp.add, acc, scaled)
+    return jax.tree_util.tree_map(
+        lambda x, d: x - eta * tau_eff * d, x_t, acc)

@@ -1,0 +1,143 @@
+"""Monte-Carlo estimation of the ML constants (paper App. H, Algs. 4-7).
+
+  * Theta_i: local data variability (Assumption 2) — Alg. 4
+  * L: smoothness (Assumption 1) — Alg. 5 (local max -> global max at s_est)
+  * zeta1, zeta2: bounded dissimilarity (Assumption 3) — Alg. 6 via least
+    squares on (sum p_i ||g_i||^2, ||sum p_i g_i||^2) pairs
+  * dynamic re-estimation wrapper — Alg. 7 (running max)
+
+All estimates are scaled by ``safety`` (paper uses 1.5x) before use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.convergence import MLConstants
+
+
+def _rand_params_like(key, params, scale=1.0):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    ks = jax.random.split(key, len(leaves))
+    new = [jax.random.normal(k, l.shape, l.dtype) * scale
+           for k, l in zip(ks, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def _flat(g):
+    return jnp.concatenate([x.reshape(-1) for x in
+                            jax.tree_util.tree_leaves(g)])
+
+
+def estimate_theta(loss_fn: Callable, params_template, data: dict, *,
+                   key, iters: int = 10, sample: int = 32) -> float:
+    """Alg. 4: Theta_i ~= max_j mean_{xi,xi'} ||grad f(x;xi)-grad f(x;xi')||
+    / ||xi - xi'||  over random models x_j."""
+    D = jax.tree_util.tree_leaves(data)[0].shape[0]
+    n = min(sample, D)
+    per_ex_grad = jax.vmap(
+        jax.grad(lambda p, x, y: loss_fn(p, {"x": x[None], "y": y[None]})),
+        in_axes=(None, 0, 0))
+    best = 0.0
+    for j in range(iters):
+        kj, key = jax.random.split(key)
+        p = _rand_params_like(kj, params_template, 0.5)
+        idx = jax.random.choice(kj, D, (n,), replace=False)
+        xs, ys = data["x"][idx], data["y"][idx]
+        gs = per_ex_grad(p, xs, ys)
+        G = jax.vmap(_flat)(gs)                      # (n, P)
+        X = xs.reshape(n, -1).astype(jnp.float32)
+        gd = jnp.linalg.norm(G[:, None] - G[None, :], axis=-1)
+        xd = jnp.linalg.norm(X[:, None] - X[None, :], axis=-1)
+        mask = xd > 1e-9
+        ratio = jnp.where(mask, gd / jnp.maximum(xd, 1e-9), 0.0)
+        best = max(best, float(jnp.mean(ratio)))  # Alg.4 averages pairs
+    return best
+
+
+def estimate_L(loss_fn: Callable, params_template, data: dict, *,
+               key, iters: int = 10) -> float:
+    """Alg. 5 local part: max_j ||grad F(x1)-grad F(x2)|| / ||x1-x2||."""
+    grad_fn = jax.grad(lambda p: loss_fn(p, data))
+    best = 0.0
+    for j in range(iters):
+        k1, k2, key = jax.random.split(key, 3)
+        p1 = _rand_params_like(k1, params_template, 0.5)
+        p2 = _rand_params_like(k2, params_template, 0.5)
+        g1, g2 = _flat(grad_fn(p1)), _flat(grad_fn(p2))
+        dx = _flat(p1) - _flat(p2)
+        best = max(best, float(jnp.linalg.norm(g1 - g2) /
+                               jnp.maximum(jnp.linalg.norm(dx), 1e-9)))
+    return best
+
+
+def estimate_zeta(loss_fn: Callable, params_template,
+                  datasets: Sequence[dict], *, key, iters: int = 10):
+    """Alg. 6: linear regression of sum p_i||g_i||^2 on ||sum p_i g_i||^2."""
+    D = np.array([jax.tree_util.tree_leaves(d)[0].shape[0]
+                  for d in datasets], np.float64)
+    p = D / D.sum()
+    lhs, rhs = [], []
+    for j in range(iters):
+        kj, key = jax.random.split(key)
+        x = _rand_params_like(kj, params_template, 0.5)
+        gs = [_flat(jax.grad(lambda pp: loss_fn(pp, d))(x)) for d in datasets]
+        lhs.append(float(sum(pi * float(jnp.sum(g * g))
+                             for pi, g in zip(p, gs))))
+        gbar = sum(pi * g for pi, g in zip(p, gs))
+        rhs.append(float(jnp.sum(gbar * gbar)))
+    A = np.stack([np.array(rhs), np.ones(len(rhs))], axis=1)
+    sol, *_ = np.linalg.lstsq(A, np.array(lhs), rcond=None)
+    zeta1 = max(float(sol[0]), 1.0)                    # Assumption 3: >= 1
+    zeta2 = max(float(sol[1]), 0.0)
+    return zeta1, zeta2
+
+
+def estimate_constants(loss_fn: Callable, params_template,
+                       datasets: Sequence[dict], *, key,
+                       iters: int = 8, safety: float = 1.5,
+                       f0_gap: float = 2.3) -> MLConstants:
+    """One-shot pre-training estimation (App. H-1) across all DPUs."""
+    ks = jax.random.split(key, len(datasets) + 2)
+    theta = np.array([
+        estimate_theta(loss_fn, params_template, d, key=ks[i], iters=iters)
+        for i, d in enumerate(datasets)])
+    L = max(estimate_L(loss_fn, params_template, d, key=ks[-2], iters=iters)
+            for d in datasets)
+    z1, z2 = estimate_zeta(loss_fn, params_template, datasets, key=ks[-1],
+                           iters=iters)
+    # sigma_i^2 = sample variance of the data VECTORS (Prop. 1 pairs it with
+    # Theta_i^2 ||xi - xi'||^2 terms): mean squared distance to the mean.
+    sigma = []
+    for d in datasets:
+        flat = np.asarray(d["x"]).reshape(d["x"].shape[0], -1)
+        sigma.append(np.sqrt(np.mean(np.sum(
+            (flat - flat.mean(0, keepdims=True)) ** 2, axis=1))))
+    sigma = np.array(sigma)
+    return MLConstants(L=safety * L, theta_i=safety * theta,
+                       sigma_i=sigma, zeta1=safety * z1, zeta2=safety * z2,
+                       F0_gap=f0_gap)
+
+
+def dynamic_update(old: MLConstants, new: MLConstants) -> MLConstants:
+    """Alg. 7 post-processing: element-wise running max."""
+    return MLConstants(
+        L=max(old.L, new.L),
+        theta_i=np.maximum(old.theta_i, new.theta_i),
+        sigma_i=np.maximum(old.sigma_i, new.sigma_i),
+        zeta1=max(old.zeta1, new.zeta1),
+        zeta2=max(old.zeta2, new.zeta2),
+        F0_gap=max(old.F0_gap, new.F0_gap))
+
+
+def sgd_variance_bound(m_frac: float, D: int, sigma: float,
+                       theta: float) -> float:
+    """Proposition 1: E||grad_tilde F - grad F||^2 <=
+    2 (1-m)(D-1)/(m D^2) * sigma^2 * Theta^2 (without-replacement)."""
+    m = np.clip(m_frac, 1e-9, 1.0)
+    return float(2 * (1 - m) * (D - 1) / (m * D ** 2) * sigma ** 2
+                 * theta ** 2)

@@ -1,0 +1,162 @@
+"""Mesh-native CE-FL round: the paper's heterogeneous FedProx round (eqs.
+5-11) as a single jittable SPMD step.
+
+DPU mapping (see DESIGN.md §3): every param leaf carries a leading ``n_dpu``
+axis.  DPU cohorts are placed on a mesh axis (the ``pod`` axis on the
+multi-pod mesh -> 2 DPUs; optionally the ``data`` axis -> 16 DPUs for models
+whose per-DPU replica fits).  During the gamma_max local iterations there is
+**no cross-DPU collective** — vmap over the DPU axis keeps everything
+cohort-local (within-cohort data parallelism still all-reduces grads, which
+is intra-DPU and allowed).  The round ends with the eq.-11 weighted
+aggregation, the only cross-DPU collective, realizing the floating
+aggregation point as a collective schedule (all_reduce by default,
+reduce_scatter+all_gather or hierarchical as perf variants).
+
+Heterogeneity is vectorized: all DPUs run to gamma_max; per-DPU activity
+masks and the FedNova coefficients a_{i,l} = (1-eta*mu)^(gamma_i-1-l) zero
+out inactive steps, so control flow stays SPMD-uniform.
+
+Batches arrive pre-split as (n_dpu, n_micro, mb, ...): every local SGD
+iteration gradient-accumulates over the n_micro microbatches (the microbatch
+axis is unsharded; mb is the within-DPU data-parallel axis), so one local
+step sees the DPU's full round batch with the m_i mini-batch ratio applied
+as a per-example mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CEFLHyper:
+    eta: float = 1e-2          # local SGD step size
+    mu: float = 0.01           # FedProx proximal coefficient
+    theta: float = 1.0         # global scaling (vartheta in eq. 11)
+    gamma_max: int = 1         # max local iterations (per-DPU gamma <= this)
+    n_micro: int = 1           # microbatches per DPU batch
+    agg_schedule: str = "all_reduce"   # all_reduce | reduce_scatter | hierarchical
+    grad_dtype: str = "float32"        # accumulated-gradient dtype
+
+
+def a_l1(gamma, eta, mu):
+    """||a_i||_1 = sum_l (1-eta*mu)^(gamma-1-l), traced-gamma safe."""
+    r = 1.0 - eta * mu
+    g = gamma.astype(jnp.float32)
+    if abs(r - 1.0) < 1e-12:
+        return g
+    return (1.0 - jnp.exp(g * jnp.log(r))) / (1.0 - r)
+
+
+def build_cefl_round_step(loss_fn: Callable, hyper: CEFLHyper):
+    """loss_fn(params, microbatch, example_mask) -> (loss, aux).
+
+    Returns round_step(params, batch, meta) -> (new_params, metrics) where
+    every ``params`` leaf has a leading n_dpu axis, ``batch`` leaves are
+    (n_dpu, n_micro, mb, ...), and meta = {'gamma': (n_dpu,) i32,
+    'm_frac': (n_dpu,) f32, 'weight': (n_dpu,) f32 (D_i/D, sums to 1)}.
+    """
+    eta, mu, theta = hyper.eta, hyper.mu, hyper.theta
+    gamma_max, n_micro = hyper.gamma_max, hyper.n_micro
+    acc_dt = jnp.dtype(hyper.grad_dtype)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def local(params_i, batch_i, gamma_i, m_i):
+        anchor = params_i
+        mb = jax.tree_util.tree_leaves(batch_i)[0].shape[1]
+
+        def batch_grad(p):
+            """grad of F_i over the DPU's full round batch: gradient
+            accumulation over the n_micro microbatches (eq. 7, with the
+            CE-FL mini-batch ratio as a leading-example mask)."""
+            mask = (jnp.arange(mb) < jnp.ceil(m_i * mb)).astype(jnp.float32)
+
+            def micro_step(carry, micro):
+                loss_s, g_acc = carry
+                (loss, _aux), gF = grad_fn(p, micro, mask)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, gF)
+                return (loss_s + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, acc_dt), p)
+            (loss_s, g), _ = jax.lax.scan(
+                micro_step, (jnp.zeros((), jnp.float32), g0), batch_i)
+            inv = 1.0 / n_micro
+            g = jax.tree_util.tree_map(lambda x: x * inv, g)
+            return loss_s * inv, g
+
+        def one_step(k, p):
+            loss, gF = batch_grad(p)
+            if eta * mu > 0:
+                a_k = jnp.exp((gamma_i.astype(jnp.float32) - 1.0 - k)
+                              * jnp.log(1.0 - eta * mu))
+            else:
+                a_k = jnp.ones(())
+            active = (k < gamma_i).astype(jnp.float32)
+            p_new = jax.tree_util.tree_map(
+                lambda pp, g, x0: (pp.astype(jnp.float32)
+                                   - active * eta * (g.astype(jnp.float32)
+                                   + mu * (pp.astype(jnp.float32)
+                                           - x0.astype(jnp.float32)))
+                                   ).astype(pp.dtype),
+                p, gF, anchor)
+            return p_new, gF, (active * a_k), loss
+
+        if gamma_max == 1:
+            # single local iteration: no param-update chain needed
+            _p_fin, gF, w, loss_val = one_step(jnp.zeros((), jnp.int32),
+                                               params_i)
+            acc = jax.tree_util.tree_map(
+                lambda g: (w * g.astype(jnp.float32)).astype(acc_dt), gF)
+        else:
+            def body(k, carry):
+                p, acc, _ = carry
+                p_new, gF, w, loss = one_step(k, p)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + (w * g.astype(jnp.float32)).astype(acc_dt),
+                    acc, gF)
+                return (p_new, acc, loss)
+
+            acc0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, acc_dt), params_i)
+            _p_fin, acc, loss_val = jax.lax.fori_loop(
+                0, gamma_max, body, (params_i, acc0,
+                                     jnp.zeros((), jnp.float32)))
+
+        norm = a_l1(gamma_i, eta, mu)
+        d_i = jax.tree_util.tree_map(lambda x: x / norm.astype(x.dtype), acc)
+        return d_i, loss_val
+
+    def round_step(params, batch, meta):
+        d, aux = jax.vmap(local)(params, batch, meta["gamma"],
+                                 meta["m_frac"])
+        w = meta["weight"]
+        # eq. (11): the only cross-DPU reduction
+        d_bar = jax.tree_util.tree_map(
+            lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=(0, 0)), d)
+        new_params = jax.tree_util.tree_map(
+            lambda p, db: (p.astype(jnp.float32)
+                           - theta * eta * db.astype(jnp.float32)[None]
+                           ).astype(p.dtype),
+            params, d_bar)
+        metrics = {"loss": jnp.mean(aux)}
+        return new_params, metrics
+
+    return round_step
+
+
+def make_dpu_meta(n_dpu: int, *, gammas=None, m_fracs=None, weights=None):
+    gammas = jnp.asarray(gammas if gammas is not None
+                         else [1] * n_dpu, jnp.int32)
+    m_fracs = jnp.asarray(m_fracs if m_fracs is not None
+                          else [1.0] * n_dpu, jnp.float32)
+    if weights is None:
+        weights = [1.0 / n_dpu] * n_dpu
+    weights = jnp.asarray(weights, jnp.float32)
+    weights = weights / jnp.sum(weights)
+    return {"gamma": gammas, "m_frac": m_fracs, "weight": weights}

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_image_dataset, make_online_ues, make_token_batches,
+)

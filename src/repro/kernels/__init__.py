@@ -1,0 +1,4 @@
+# Pallas TPU kernels for CE-FL's per-round compute hot spots + serving.
+# <name>.py: pl.pallas_call + BlockSpec; ops.py: jitted wrappers;
+# ref.py: pure-jnp oracles (tests assert allclose across shape/dtype sweeps).
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused FedProx local update (paper eqs. 5-6).
+
+    x_new = x - eta * (g + mu * (x - anchor))
+
+Unfused, XLA emits sub/mul/add chains with 5 HBM reads + 3 writes over
+params-sized buffers; the fused kernel does 3 reads + 1 write per element in
+one VMEM pass.  This op runs every local SGD iteration of every DPU, on
+every parameter — the highest-frequency elementwise hot spot in CE-FL.
+
+Layout: parameters are flattened and padded to (rows, 1024) with rows a
+multiple of 8; tiles of (256, 1024) f32 = 3 x 1MB operands per step fit VMEM
+comfortably (v5e ~128MB VMEM per core) while keeping the last dim a multiple
+of the 128-lane register width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024          # last-dim tile (multiple of 128)
+ROWS = 256           # rows per tile (multiple of 8)
+
+
+def _kernel(x_ref, g_ref, a_ref, eta_ref, mu_ref, o_ref):
+    eta = eta_ref[0, 0]
+    mu = mu_ref[0, 0]
+    x = x_ref[...]
+    g = g_ref[...]
+    a = a_ref[...]
+    xf = x.astype(jnp.float32)
+    upd = xf - eta * (g.astype(jnp.float32) + mu * (xf - a.astype(jnp.float32)))
+    o_ref[...] = upd.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedprox_update_2d(x, g, anchor, eta, mu, *, interpret: bool = False):
+    """x, g, anchor: (R, LANE) with R % ROWS == 0."""
+    R, L = x.shape
+    assert L == LANE and R % ROWS == 0, (R, L)
+    grid = (R // ROWS,)
+    spec = pl.BlockSpec((ROWS, LANE), lambda i: (i, 0))
+    eta = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, g, anchor, eta, mu)

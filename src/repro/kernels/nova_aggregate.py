@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: floating-point aggregation update (paper eq. 11).
+
+    x_new = x - theta * eta * sum_i w_i * d_i
+
+The aggregation DC applies this to the stacked scaled accumulated gradients
+it received (post-collective, the D_i/D weights folded into w).  Fusing the
+weighted reduction with the model update avoids materializing sum_i w_i d_i
+in HBM: one pass reads the (n_dpu, block) gradient tile plus the x tile and
+writes x_new.
+
+Tiles: (n_dpu, ROWS=128, LANE=1024) f32 -> n_dpu x 512KB + 512KB in VMEM;
+fine for n_dpu <= ~64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024
+ROWS = 128
+
+
+def _kernel(x_ref, d_ref, w_ref, se_ref, o_ref):
+    scale = se_ref[0, 0]                     # theta * eta
+    x = x_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)       # (n_dpu, ROWS, LANE)
+    w = w_ref[0, :]                           # (n_dpu,)
+    agg = jnp.einsum("n,nrl->rl", w, d)
+    o_ref[...] = (x - scale * agg).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nova_aggregate_2d(x, d_stack, weights, theta_eta, *,
+                      interpret: bool = False):
+    """x: (R, LANE); d_stack: (n_dpu, R, LANE); weights: (n_dpu,)."""
+    R, L = x.shape
+    n = d_stack.shape[0]
+    assert L == LANE and R % ROWS == 0 and d_stack.shape == (n, R, L)
+    grid = (R // ROWS,)
+    xspec = pl.BlockSpec((ROWS, LANE), lambda i: (i, 0))
+    dspec = pl.BlockSpec((n, ROWS, LANE), lambda i: (0, i, 0))
+    wspec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[xspec, dspec, wspec, sspec],
+        out_specs=xspec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, d_stack, weights.reshape(1, n).astype(jnp.float32),
+      jnp.asarray(theta_eta, jnp.float32).reshape(1, 1))

@@ -1,0 +1,68 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handle pytree flattening / padding to kernel tile shapes, dispatch to the
+kernel (interpret=True on CPU — the TPU path is the same pallas_call), and
+reassemble pytrees.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fedprox_update as _fp
+from repro.kernels import nova_aggregate as _na
+from repro.kernels.swa_decode_attention import swa_decode_attention  # noqa: F401
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+INTERPRET = not _ON_TPU
+
+
+def _flatten_pad(tree, lane, rows):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                            for x in leaves])
+    n = flat.shape[0]
+    block = lane * rows
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, lane), treedef, [x.shape for x in leaves], \
+        [x.dtype for x in leaves], n
+
+
+def _unflatten(flat2d, treedef, shapes, dtypes, n):
+    flat = flat2d.reshape(-1)[:n]
+    out, off = [], 0
+    for s, dt in zip(shapes, dtypes):
+        k = int(np.prod(s)) if s else 1
+        out.append(flat[off:off + k].reshape(s).astype(dt))
+        off += k
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def fedprox_update(params, grads, anchor, eta, mu, *,
+                   interpret: bool = None):
+    """Fused x <- x - eta*(g + mu*(x - anchor)) over a whole pytree."""
+    interpret = INTERPRET if interpret is None else interpret
+    x2, treedef, shapes, dtypes, n = _flatten_pad(params, _fp.LANE, _fp.ROWS)
+    g2, *_ = _flatten_pad(grads, _fp.LANE, _fp.ROWS)
+    a2, *_ = _flatten_pad(anchor, _fp.LANE, _fp.ROWS)
+    out = _fp.fedprox_update_2d(x2, g2, a2, eta, mu, interpret=interpret)
+    return _unflatten(out, treedef, shapes, dtypes, n)
+
+
+def nova_aggregate(x, d_list: Sequence, weights, theta_eta, *,
+                   interpret: bool = None):
+    """x <- x - theta*eta*sum_i w_i d_i over pytrees (eq. 11)."""
+    interpret = INTERPRET if interpret is None else interpret
+    x2, treedef, shapes, dtypes, n = _flatten_pad(x, _na.LANE, _na.ROWS)
+    ds = [_flatten_pad(d, _na.LANE, _na.ROWS)[0] for d in d_list]
+    d_stack = jnp.stack(ds, axis=0)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    out = _na.nova_aggregate_2d(x2, d_stack, w, theta_eta,
+                                interpret=interpret)
+    return _unflatten(out, treedef, shapes, dtypes, n)

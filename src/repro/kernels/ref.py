@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-exact references used by
+the allclose test sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedprox_update_ref(x, g, anchor, eta, mu):
+    xf = x.astype(jnp.float32)
+    out = xf - eta * (g.astype(jnp.float32)
+                      + mu * (xf - anchor.astype(jnp.float32)))
+    return out.astype(x.dtype)
+
+
+def nova_aggregate_ref(x, d_stack, weights, theta_eta):
+    agg = jnp.einsum("n,n...->...", weights.astype(jnp.float32),
+                     d_stack.astype(jnp.float32))
+    return (x.astype(jnp.float32) - theta_eta * agg).astype(x.dtype)
+
+
+def swa_decode_attention_ref(q, k_cache, v_cache, cache_len):
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg,
+                   k_cache.astype(jnp.float32)) / jnp.sqrt(float(D))
+    pos = jnp.arange(S)
+    s = jnp.where((pos < cache_len)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: single-token decode attention over a (sliding-window)
+KV cache — the serving hot spot of decode_32k / long_500k.
+
+Per grid cell (batch b, kv-head k): computes GQA attention of the G query
+heads that share kv-head k against the cache, streaming the cache in
+(CHUNK, D) tiles through VMEM with the safe-softmax (m, l, acc) recursion.
+Masking uses the global cache_len (valid prefix) — rolling-window caches
+pass a fully-valid cache.
+
+Tile maths (v5e): CHUNK=512, D=128 -> k/v tiles 2x128KB bf16; acc (G, D)
+f32 in VMEM.  D and CHUNK are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, chunk: int):
+    # q_ref: (1,1,G,D); k_ref/v_ref: (1,1,S,D); len_ref: (1,1); o: (1,1,G,D)
+    G, D = q_ref.shape[2], q_ref.shape[3]
+    S = k_ref.shape[2]
+    cache_len = len_ref[0, 0]
+    q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    def body(i, carry):
+        acc, m, l = carry
+        kblk = k_ref[0, 0, pl.ds(i * chunk, chunk), :].astype(jnp.float32)
+        vblk = v_ref[0, 0, pl.ds(i * chunk, chunk), :].astype(jnp.float32)
+        s = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32) * scale
+        pos = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+        s = jnp.where(pos < cache_len, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.dot(p, vblk,
+                                       preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((G, D), jnp.float32)
+    m0 = jnp.full((G, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, S // chunk, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def swa_decode_attention(q, k_cache, v_cache, cache_len, *,
+                         chunk: int = 512, interpret: bool = False):
+    """q: (B, Hq, D); k/v_cache: (B, S, Hkv, D); cache_len scalar int32.
+    Returns (B, Hq, D).  S % chunk == 0; D a multiple of 128 on real TPUs."""
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    qg = q.reshape(B, Hkv, G, D)
+    kc = k_cache.transpose(0, 2, 1, 3)        # (B, Hkv, S, D)
+    vc = v_cache.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(qg, kc, vc, jnp.asarray(cache_len, jnp.int32).reshape(1, 1))
+    return out.reshape(B, Hq, D)

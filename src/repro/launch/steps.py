@@ -1,0 +1,252 @@
+"""Per-(architecture x input-shape x mesh) execution plans: step functions,
+abstract input specs, and shardings.  Used by dryrun.py (lower+compile) and
+train.py / serve.py (real execution).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.round_step import CEFLHyper, build_cefl_round_step
+from repro.models import lm as L
+from repro.models.common import ShardCtx
+from repro.sharding import specs as SP
+
+ACT_BUDGET = 2.5e9       # per-device saved-activation budget (bytes)
+SW_LONG = 8192           # sliding window for the long_500k dense variant
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    arch: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    multi_pod: bool
+    n_dpu: int
+    n_micro: int
+    mb: int                  # examples per microbatch (per DPU)
+    remat_chunk: int
+    gamma_max: int
+    seq_shard_decode: bool
+    wide_cache: bool
+    skip: Optional[str] = None     # reason, if the combo is skipped
+    embed_replicated: bool = False  # perf variant: replicate (un)embedding
+
+    @property
+    def mesh_name(self):
+        return "2x16x16" if self.multi_pod else "16x16"
+
+    @property
+    def chips(self):
+        return 512 if self.multi_pod else 256
+
+
+def _divisor_at_least(n: int, target: float) -> int:
+    """Smallest divisor of n that is >= target."""
+    for d in range(1, n + 1):
+        if n % d == 0 and d >= target:
+            return d
+    return n
+
+
+def make_plan(arch: str, shape_name: str, *, multi_pod: bool,
+              gamma_max: int = 1, data_ax: int = 16,
+              remat_chunk: Optional[int] = None,
+              n_micro: Optional[int] = None,
+              embed_replicated: bool = False) -> Plan:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    skip = None
+    seq_shard = False
+    wide = False
+    if shape_name == "long_500k":
+        if cfg.is_encdec:
+            skip = ("enc-dec full-attention architecture: no faithful "
+                    "sub-quadratic variant (DESIGN.md §Arch-applicability)")
+        elif cfg.attn_free:
+            pass                            # SSM: native O(1) decode
+        elif cfg.family == "hybrid":
+            seq_shard, wide = True, True    # full cache, 256-way seq shard
+        elif cfg.sliding_window is None:
+            cfg = dataclasses.replace(cfg, sliding_window=SW_LONG)
+            seq_shard = True                # window cache seq-sharded
+        else:
+            seq_shard = True                # native window (starcoder2)
+    elif shape.mode == "decode" and not cfg.attn_free:
+        seq_shard = True
+
+    n_dpu = 2 if (multi_pod and shape.mode == "train") else 1
+    mb = None
+    if shape.mode == "train":
+        per_dpu = shape.global_batch // n_dpu
+        if n_micro is None:
+            # keep one example per data shard per microbatch by default
+            n_micro = max(1, per_dpu // data_ax)
+        mb = per_dpu // n_micro
+        assert mb * n_micro == per_dpu
+        if remat_chunk is None:
+            from repro.models.blocks import num_periods, period_spec
+            n_per = num_periods(cfg)
+            plen = len(period_spec(cfg))
+            tokens_per_dev = shape.seq_len * mb // data_ax
+            bytes_per_chunkless = n_per * tokens_per_dev * cfg.d_model * 2
+            remat_chunk = _divisor_at_least(
+                n_per, bytes_per_chunkless / ACT_BUDGET)
+    return Plan(arch=arch, cfg=cfg, shape=shape, multi_pod=multi_pod,
+                n_dpu=n_dpu, n_micro=n_micro or 1, mb=mb or 0,
+                remat_chunk=remat_chunk or 1, gamma_max=gamma_max,
+                seq_shard_decode=seq_shard, wide_cache=wide, skip=skip,
+                embed_replicated=embed_replicated)
+
+
+# ------------------------------------------------------------- specs -----
+
+def input_specs(plan: Plan) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    cfg, shape = plan.cfg, plan.shape
+    S = shape.seq_len
+    if shape.mode == "train":
+        sh = (plan.n_dpu, plan.n_micro, plan.mb, S)
+        out = {"tokens": jax.ShapeDtypeStruct(sh, jnp.int32),
+               "labels": jax.ShapeDtypeStruct(sh, jnp.int32)}
+        if cfg.is_encdec:
+            out["enc_embed"] = jax.ShapeDtypeStruct(
+                sh[:-1] + (cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        return out
+    if shape.mode == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, S),
+                                              jnp.int32)}
+        if cfg.is_encdec:
+            out["enc_embed"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        return out
+    # decode: one new token + the cache
+    return {"tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)}
+
+
+def abstract_params(plan: Plan):
+    cfg = plan.cfg
+    p = jax.eval_shape(lambda: L.init_lm_params(jax.random.PRNGKey(0), cfg))
+    if plan.shape.mode == "train":
+        p = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((plan.n_dpu,) + s.shape, s.dtype),
+            p)
+    return p
+
+
+def abstract_cache(plan: Plan):
+    cfg, shape = plan.cfg, plan.shape
+    return jax.eval_shape(
+        lambda: L.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def shard_ctx(plan: Plan, mesh) -> ShardCtx:
+    if plan.shape.mode == "decode" and plan.shape.global_batch == 1:
+        batch_axes: Tuple = ()
+        cache_axes = ("model", "data") if plan.wide_cache else ("model",)
+    else:
+        batch_axes = ("pod", "data") if plan.multi_pod else ("data",)
+        cache_axes = ("model",)
+    return ShardCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model",
+                    cache_axes=cache_axes,
+                    seq_shard_decode=plan.seq_shard_decode)
+
+
+def param_shardings(plan: Plan, mesh):
+    base = jax.eval_shape(
+        lambda: L.init_lm_params(jax.random.PRNGKey(0), plan.cfg))
+    specs = SP.param_specs(plan.cfg, base)
+    if plan.embed_replicated:
+        specs = dict(specs)
+        specs["embed"] = P(None, None)
+        if "unembed" in specs:
+            specs["unembed"] = P(None, None)
+    shapes = base
+    if plan.shape.mode == "train":
+        lead = "pod" if plan.multi_pod else None
+        specs = jax.tree_util.tree_map(lambda s: P(lead, *s), specs)
+        shapes = abstract_params(plan)
+    specs = SP.sanitize_tree(specs, shapes, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def batch_shardings(plan: Plan, mesh):
+    if plan.shape.mode == "train":
+        lead = "pod" if plan.multi_pod else None
+        def spec(s):
+            extra = (None,) * (len(s.shape) - 4)
+            return NamedSharding(mesh, P(lead, None, "data",
+                                         *( (None,) + extra )))
+        return jax.tree_util.tree_map(spec, input_specs(plan))
+    ctx = shard_ctx(plan, mesh)
+    b_ax = tuple(ctx.batch_axes) or None
+    def spec(s):
+        rest = (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, P(b_ax, *rest))
+    return jax.tree_util.tree_map(spec, input_specs(plan))
+
+
+def cache_shardings(plan: Plan, mesh):
+    ctx = shard_ctx(plan, mesh)
+    b_ax = tuple(ctx.batch_axes) or None
+    cache = abstract_cache(plan)
+    specs = SP.cache_specs(plan.cfg, cache,
+                           batch_axes=b_ax,
+                           seq_axes=tuple(ctx.cache_axes),
+                           seq_shard=plan.seq_shard_decode)
+    specs = SP.sanitize_tree(specs, cache, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ------------------------------------------------------------- steps -----
+
+def build_train_step(plan: Plan, hyper: Optional[CEFLHyper] = None):
+    cfg = plan.cfg
+    # >100B-param configs: bf16 gradient accumulators (HBM headroom)
+    big = cfg.param_count() > 100e9
+    hyper = hyper or CEFLHyper(gamma_max=plan.gamma_max,
+                               n_micro=plan.n_micro,
+                               grad_dtype="bfloat16" if big else "float32")
+
+    def loss_fn(params, micro, mask):
+        loss, aux = L.lm_loss(params, cfg, micro, example_mask=mask,
+                              remat=True, remat_chunk=plan.remat_chunk)
+        return loss, aux
+
+    return build_cefl_round_step(loss_fn, hyper)
+
+
+def build_prefill_step(plan: Plan, mesh=None):
+    cfg, shape = plan.cfg, plan.shape
+    ctx = shard_ctx(plan, mesh) if mesh is not None else None
+
+    def prefill_step(params, batch):
+        logits, cache = L.prefill(params, cfg, batch["tokens"],
+                                  cache_len=shape.seq_len,
+                                  enc_embed=batch.get("enc_embed"))
+        return logits, cache
+
+    return prefill_step
+
+
+def build_serve_step(plan: Plan, mesh=None):
+    cfg = plan.cfg
+    from repro.models.common import NO_SHARD
+    ctx = shard_ctx(plan, mesh) if mesh is not None else NO_SHARD
+
+    def serve_step(params, cache, batch):
+        logits, new_cache = L.lm_decode_step(params, cfg, batch["tokens"],
+                                             cache, ctx=ctx)
+        return logits, new_cache
+
+    return serve_step

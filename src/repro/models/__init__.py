@@ -1,0 +1,4 @@
+"""Model zoo: decoder-only LMs (dense / MoE / SSM / hybrid / VLM), the
+Whisper-style encoder-decoder, and the paper's FL classifier."""
+from repro.models import attention, blocks, classifier, lm, mamba, moe  # noqa: F401
+from repro.models.common import NO_SHARD, ShardCtx  # noqa: F401

@@ -1,0 +1,52 @@
+"""The paper's FL workload model (Sec. VI / App. G): a small image classifier
+trained with CE-FL / FedNova / FedAvg on (synthetic) F-MNIST / CIFAR-10.
+
+Kept deliberately simple (MLP on flattened pixels) so hundreds of FL rounds
+run quickly on CPU; the FL orchestration layer is model-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cefl_paper import ClassifierConfig
+
+
+def init_classifier_params(key, cfg: ClassifierConfig):
+    dims = [int(np.prod(cfg.input_shape))] + list(cfg.hidden) + [cfg.num_classes]
+    ks = jax.random.split(key, len(dims) - 1)
+    params = {}
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = (jax.random.normal(ks[i], (din, dout))
+                           * np.sqrt(2.0 / din)).astype(cfg.dtype)
+        params[f"b{i}"] = jnp.zeros((dout,), cfg.dtype)
+    return params
+
+
+def classifier_logits(params, x):
+    """x: (B, *input_shape) or (B, D)."""
+    h = x.reshape(x.shape[0], -1)
+    n = len(params) // 2
+    for i in range(n):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def classifier_loss(params, batch, example_weights=None):
+    """Mean cross-entropy; ``example_weights``: (B,) 0/1 mini-batch mask."""
+    logits = classifier_logits(params, batch["x"]).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    nll = logz - gold
+    if example_weights is not None:
+        w = example_weights.astype(jnp.float32)
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.mean(nll)
+
+
+def classifier_accuracy(params, x, y):
+    pred = jnp.argmax(classifier_logits(params, x), axis=-1)
+    return jnp.mean((pred == y).astype(jnp.float32))

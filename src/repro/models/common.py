@@ -1,0 +1,91 @@
+"""Shared NN building blocks (pure JAX, explicit param pytrees)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """How the model should express distribution.
+
+    ``batch_axes``: mesh axis names carrying the batch dimension.
+    ``model_axis``: tensor-parallel axis name (heads / ff / experts).
+    ``seq_shard_decode``: decode KV caches are sequence-sharded over
+    ``cache_axes`` and attention runs the shard_map psum safe-softmax.
+    ``None`` mesh -> single-device paths everywhere (tests / CPU examples).
+    """
+    mesh: Optional[object] = None          # jax.sharding.Mesh
+    batch_axes: tuple = ("data",)
+    model_axis: Optional[str] = "model"
+    cache_axes: tuple = ("model",)
+    seq_shard_decode: bool = False
+
+    @property
+    def on_mesh(self) -> bool:
+        return self.mesh is not None
+
+
+NO_SHARD = ShardCtx()
+
+
+def dense_init(key, in_dim, out_shape, dtype, scale=None):
+    fan_in = in_dim
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, (in_dim,) + tuple(out_shape)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float, positions: jnp.ndarray):
+    """positions: (...,) int32 -> (…, head_dim//2) angles."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions[..., None].astype(jnp.float32) * freq
+
+
+def apply_rope(x, angles):
+    """x: (..., S, H, D); angles: (S, D//2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits: (..., V) f32-accumulated; labels int32; mask broadcastable."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,91 @@
+"""Mixture-of-Experts with capacity-based einsum dispatch (GSPMD-friendly).
+
+Tokens are processed in groups (default: one sequence per group); dispatch and
+combine tensors are (G, T, E, C) one-hots so all routing is expressed as
+einsums that XLA/GSPMD can shard (expert dim on the `model` mesh axis turns
+the dispatch einsums into all-to-all-style collectives).
+
+Variants covered (per the assigned architectures):
+  * top-1 (llama4-maverick) / top-2 (arctic, jamba)
+  * dense residual branch in parallel (arctic)
+  * always-on shared expert (llama4)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+def init_moe_params(key, d_model: int, m: MoEConfig, dtype) -> dict:
+    import numpy as np
+    ks = jax.random.split(key, 4)
+    scale_in = 1.0 / np.sqrt(d_model)
+    scale_out = 1.0 / np.sqrt(m.expert_ff)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, m.num_experts)) * scale_in
+                   ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (m.num_experts, d_model, m.expert_ff))
+                   * scale_in).astype(dtype),
+        "w_in": (jax.random.normal(ks[2], (m.num_experts, d_model, m.expert_ff))
+                 * scale_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (m.num_experts, m.expert_ff, d_model))
+                  * scale_out).astype(dtype),
+    }
+    return p
+
+
+def moe_capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    c = int(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts)
+    return max(c, m.top_k)
+
+
+def moe_forward(params: dict, x: jnp.ndarray, m: MoEConfig,
+                group_size: int = 1024,
+                capacity: int = None) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (y, aux) with aux = {load_balance, router_z}.
+
+    ``capacity``: expert capacity override; pass ``group_size`` (worst case)
+    for drop-free routing (used by the decode path)."""
+    B, S, d = x.shape
+    T = B * S
+    group_size = min(group_size, T)
+    assert T % group_size == 0, (T, group_size)
+    G = T // group_size
+    xg = x.reshape(G, group_size, d)
+    E, k = m.num_experts, m.top_k
+    C = capacity if capacity is not None else moe_capacity(group_size, m)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (G,T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)  # (G,T,k,E)
+    # position of each (token, choice) within its expert queue
+    flat = onehot.reshape(G, group_size * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (G,T*k,E)
+    keep = (pos < C).astype(jnp.float32) * flat
+    disp_flat = keep[..., None] * jax.nn.one_hot(pos, C, dtype=jnp.float32)
+    disp = disp_flat.reshape(G, group_size, k, E, C)
+    dispatch_tok = jnp.sum(disp, axis=2)                       # (G,T,E,C)
+    combine_tok = jnp.sum(disp * gate_vals[..., None, None], axis=2)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch_tok.astype(x.dtype), xg)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["w_in"])
+    g = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_out"])
+    y = jnp.einsum("gtec,gecd->gtd", combine_tok.astype(x.dtype), ye)
+
+    # aux losses (Switch-style)
+    density = jnp.mean(jnp.sum(onehot, axis=2), axis=1)        # (G,E) dispatch frac
+    prob_mean = jnp.mean(probs, axis=1)                        # (G,E)
+    load_balance = E * jnp.mean(jnp.sum(density * prob_mean, axis=-1))
+    router_z = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    aux = {"load_balance": load_balance, "router_z": router_z}
+    return y.reshape(B, S, d), aux

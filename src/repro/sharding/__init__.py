@@ -1,0 +1,3 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_spec, cache_specs, param_specs, shard_ctx_for,
+)

@@ -1,0 +1,137 @@
+"""PartitionSpec rules for every parameter / cache / batch tensor.
+
+Scheme (per pod): 2-D sharding over ('data', 'model'):
+  * d_model-like dims -> 'data'  (FSDP / ZeRO-3 style, gathered on use)
+  * heads / d_ff / experts / d_inner dims -> 'model' (tensor parallel)
+  * batch -> ('pod', 'data'); weights replicated over 'pod'
+  * decode KV caches: batch -> 'data', sequence -> 'model' (the shard_map
+    psum-softmax attention consumes this layout)
+
+Rules key off leaf path names, so any model assembled from repro.models
+blocks is covered automatically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ShardCtx
+
+
+def _leaf_spec(path, leaf, *, data: str, model: str) -> P:
+    names = [getattr(p, "key", None) for p in path
+             if hasattr(p, "key")]
+    last = names[-1] if names else None
+    stacked = any(n in ("blocks", "cross") for n in names[:-1]) or \
+        (len(names) >= 2 and names[0] == "enc")
+    lead = (None,) if stacked and leaf.ndim >= 1 else ()
+
+    def spec(*dims):
+        return P(*(lead + dims))
+
+    in_mamba = "mamba" in names
+    in_moe = "moe" in names
+    if last == "embed":
+        return P(model, data)
+    if last == "unembed":
+        return P(data, model)
+    if last == "pos_embed":
+        return P(None, data)
+    if in_moe or last == "router":
+        if last == "router":
+            return spec(data, None)
+        if last in ("w_in", "w_gate"):
+            return spec(model, data, None)
+        if last == "w_out":
+            return spec(model, None, data)
+    if in_mamba:
+        if last == "w_in":
+            return spec(data, model)
+        if last == "w_out":
+            return spec(model, data)
+        if last == "conv_w":
+            return spec(None, model)
+        if last in ("conv_b", "norm"):
+            return spec(model)
+        return spec(*((None,) * (leaf.ndim - len(lead))))
+    if last in ("wq", "wk", "wv"):
+        return spec(data, model, None)
+    if last == "wo":
+        return spec(model, None, data)
+    if last in ("w_in", "w_gate"):
+        return spec(data, model)
+    if last == "w_out":
+        return spec(model, data)
+    # norms, scalars, q_norm/k_norm, ln*, final_norm
+    return spec(*((None,) * (leaf.ndim - len(lead))))
+
+
+def param_specs(cfg: ModelConfig, params, *, data: str = "data",
+                model: str = "model"):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, data=data, model=model),
+        params)
+
+
+def batch_spec(multi_pod: bool):
+    axes = ("pod", "data") if multi_pod else ("data",)
+    return axes
+
+
+def cache_specs(cfg: ModelConfig, cache, *, batch_axes=("data",),
+                seq_axes=("model",), seq_shard: bool = True):
+    """Specs for a decode cache pytree from lm.init_cache."""
+    def leaf(path, x):
+        names = [getattr(p, "key", None) for p in path if hasattr(p, "key")]
+        last = names[-1] if names else None
+        if last == "pos":
+            return P()
+        if last in ("k", "v", "xk", "xv"):
+            # (n_periods, B, S, Hkv, D)
+            s_ax = seq_axes if (seq_shard and last in ("k", "v")) else None
+            return P(None, batch_axes, s_ax, None, None)
+        if last == "h":       # (n_periods, B, H, P, N)
+            return P(None, batch_axes, None, None, None)
+        if last == "conv":    # (n_periods, B, W-1, Cc)
+            return P(None, batch_axes, None, None)
+        return P(*((None,) * x.ndim))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim
+    (pjit requires exact divisibility on argument shardings; kv-head counts
+    like 8 on a 16-way model axis degrade to replication)."""
+    entries = []
+    for i, dim in enumerate(shape):
+        entry = spec[i] if i < len(spec) else None
+        if entry is None:
+            entries.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        entries.append(entry if (size and dim % size == 0) else None)
+    return P(*entries)
+
+
+def sanitize_tree(specs, shapes, mesh):
+    return jax.tree_util.tree_map(
+        lambda s, x: sanitize_spec(s, x.shape, mesh), specs, shapes)
+
+
+def shard_ctx_for(mesh, *, multi_pod: bool, seq_shard_decode: bool,
+                  wide_cache: bool = False) -> ShardCtx:
+    """wide_cache: shard cache sequence over model AND data (long_500k b=1)."""
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    cache_axes = ("model", "data") if wide_cache else ("model",)
+    if wide_cache:
+        batch_axes = ("pod",) if multi_pod else ()
+    return ShardCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model",
+                    cache_axes=cache_axes, seq_shard_decode=seq_shard_decode)

@@ -1,0 +1,130 @@
+"""Algorithm 2 (PD CE-FL): iterative distributed primal-dual solution of the
+convexified surrogate problem P_{w^l} (eqs. 86-98).
+
+The proximal surrogate (eqs. 82-85) has an isotropic quadratic around w^l,
+so each node's partial-Lagrangian minimization (93) has the closed form
+
+    w_d* = Proj_{D_d} [ w^l - (grad_d J + sum_c Lambda_d[c] grad_d C_c)
+                               / (lambda1 + L_C * sum_c Lambda_d[c]) ]
+
+followed by the eq.-(96) local dual ascent and Algorithm-3 consensus.
+Per the paper's variable decomposition, each node updates only its owned
+block (ownership masks; the shared I_s / delta variables are co-owned by
+the DCs and averaged).  Iterate exchange between rounds is simulated via
+the same communication graph (see DESIGN.md §Assumptions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solver import constraints as K
+from repro.solver import variables as V
+from repro.solver.consensus import consensus_rounds, consensus_weights
+from repro.solver.objective import ObjectiveWeights, objective
+
+
+@dataclasses.dataclass
+class PDHyper:
+    lambda1: float = 10.0       # proximal weight (eq. 83)
+    L_C: float = 10.0           # constraint Lipschitz constant (eq. 85)
+    kappa: float = 0.5          # dual step (eq. 96)
+    max_iters: int = 8          # primal-dual alternations
+    consensus_rounds: int = 30  # J (Alg. 3)
+    tol: float = 1e-4
+
+
+def _tree_add_scaled(w, g, scale):
+    return {k: w[k] - scale * g[k] for k in w}
+
+
+def _masked_merge(base, candidates, masks):
+    """Assemble w_hat = sum_d mask_d * cand_d (+ untouched components)."""
+    out = {}
+    for kname in base:
+        acc = jnp.zeros_like(base[kname])
+        tot = jnp.zeros_like(base[kname])
+        for cand, m in zip(candidates, masks):
+            acc = acc + m[kname] * cand[kname]
+            tot = tot + m[kname]
+        out[kname] = jnp.where(tot > 0, acc / jnp.maximum(tot, 1e-12),
+                               base[kname])
+    return out
+
+
+def solve_surrogate(w_l: Dict, Lambda: np.ndarray, net, D_bar, consts,
+                    ow: ObjectiveWeights, hyper: PDHyper, masks,
+                    *, distributed: bool = True, W_cons=None,
+                    scaler: Optional[V.Scaler] = None):
+    """One full run of Algorithm 2 at SCA iterate w^l (NORMALIZED space).
+
+    Lambda: (V, nC) per-node duals (or (1, nC) for the centralized variant).
+    Returns (w_hat, Lambda_new, info)."""
+    scaler = scaler or V.Scaler(net)
+    V_nodes = len(masks)
+
+    def obj_n(wn):
+        return objective(scaler.to_phys(wn), net, D_bar, consts, ow)
+
+    def con_n(wn):
+        c = K.constraint_vector(scaler.to_phys(wn), net, D_bar)
+        return c * K.constraint_scale(net)
+
+    def project_n(wn):
+        return scaler.from_phys(V.project(scaler.to_phys(wn), net,
+                                          gamma_cap=scaler.gamma_cap))
+
+    gJ = jax.grad(obj_n)(w_l)
+    C0 = np.asarray(con_n(w_l))
+    JC = jax.jacobian(con_n)(w_l)
+    nC = C0.shape[0]
+    lam1, L_C, kappa = hyper.lambda1, hyper.L_C, hyper.kappa
+
+    def candidate(lmb):
+        """Closed-form minimizer of node's surrogate Lagrangian (93)."""
+        lmb_j = jnp.asarray(lmb, jnp.float32)
+        denom = lam1 + L_C * jnp.sum(lmb_j)
+        g = {k: gJ[k] + jnp.tensordot(lmb_j, JC[k], axes=(0, 0))
+             for k in w_l}
+        step = {k: w_l[k] - g[k] / denom for k in w_l}
+        return project_n(step)
+
+    def ctilde(w_hat, mask):
+        """Convexified constraints at node d's block (eqs. 84-85)."""
+        diff = {k: (w_hat[k] - w_l[k]) * mask[k] for k in w_l}
+        lin = np.zeros(nC)
+        sq = 0.0
+        for k in w_l:
+            jc = np.asarray(JC[k]).reshape(nC, -1)
+            lin += jc @ np.asarray(diff[k]).reshape(-1)
+            sq += float(jnp.sum(diff[k] ** 2))
+        return C0 / V_nodes + lin + 0.5 * L_C * sq
+
+    Lambda = np.array(Lambda, dtype=np.float64)
+    history = []
+    for it in range(hyper.max_iters):
+        if distributed:
+            cands = [candidate(Lambda[d]) for d in range(V_nodes)]
+            w_hat = project_n(_masked_merge(w_l, cands, masks))
+            new_L = np.stack([Lambda[d] + kappa * ctilde(w_hat, masks[d])
+                              for d in range(V_nodes)])
+            new_L = consensus_rounds(new_L, W_cons, hyper.consensus_rounds)
+            new_L = np.maximum(new_L, 0.0)
+        else:
+            w_hat = candidate(Lambda[0])
+            full_mask = {k: jnp.ones_like(w_l[k]) for k in w_l}
+            c_full = ctilde(w_hat, full_mask) * 1.0
+            # centralized (94): average of per-node contributions = global/V
+            new_L = np.maximum(Lambda + kappa * c_full[None] / 1.0, 0.0)
+        delta = float(np.abs(new_L - Lambda).max())
+        Lambda = new_L
+        history.append(delta)
+        if delta < hyper.tol:
+            break
+    info = {"dual_delta": history,
+            "max_violation": float(np.max(con_n(w_hat)))}
+    return w_hat, Lambda, info

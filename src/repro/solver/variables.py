@@ -1,0 +1,165 @@
+"""Decision-variable dict for problem P: initialization (feasible point),
+projection onto the per-node convex sets D_d (boxes / simplexes, eqs. 45-49,
+54-62, 66-68), ownership masks for the distributed solver, and rounding of
+the relaxed indicator variables.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flat_dim(w):
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(w))
+
+
+def init_w(net, D_bar, rng=None) -> Dict:
+    """Feasible start: keep all data local, uniform BS->DC dispersion,
+    aggregator = DC 0, mid-range compute settings."""
+    rng = rng or np.random.RandomState(0)
+    N, B, S = net.dims
+    cfg = net.cfg
+    w = {
+        "rho_nb": jnp.zeros((N, B)) + 0.02,
+        "rho_bs": jnp.ones((B, S)) / S,
+        "f_n": jnp.full((N,), 0.5 * (cfg.f_min + cfg.f_max)),
+        "z_s": jnp.full((S,), 0.5 * cfg.dc_point_capacity),
+        "gamma": jnp.full((N + S,), 2.0),
+        "m": jnp.full((N + S,), 0.5),
+        "I_s": jnp.ones((S,)) / S,
+        "I_nb": jnp.ones((N, B)) / B,
+        "I_bn": jnp.ones((B, N)) / B,
+        "R_bs": jnp.asarray(net.R_bs_max * 0.5),
+        "delta_A": jnp.asarray(50.0),
+        "delta_R": jnp.asarray(5.0),
+    }
+    return w
+
+
+def _project_simplex(v, z=1.0):
+    """Euclidean projection of rows of v onto {x >= 0, sum x = z}."""
+    orig = v.shape
+    v2 = v.reshape(-1, orig[-1])
+    u = jnp.sort(v2, axis=1)[:, ::-1]
+    css = jnp.cumsum(u, axis=1) - z
+    ind = jnp.arange(1, orig[-1] + 1)
+    cond = u - css / ind > 0
+    rho = jnp.sum(cond, axis=1)
+    theta = css[jnp.arange(v2.shape[0]), rho - 1] / rho
+    return jnp.maximum(v2 - theta[:, None], 0.0).reshape(orig)
+
+
+def _project_simplex_ineq(v, z=1.0):
+    """Projection onto {x >= 0, sum x <= z}."""
+    clipped = jnp.maximum(v, 0.0)
+    over = jnp.sum(clipped, axis=-1, keepdims=True) > z
+    proj = _project_simplex(v, z)
+    return jnp.where(over, proj, clipped)
+
+
+def project(w: Dict, net, gamma_cap: float = 20.0) -> Dict:
+    cfg = net.cfg
+    N, B, S = net.dims
+    out = dict(w)
+    out["rho_nb"] = _project_simplex_ineq(w["rho_nb"])          # (45),(55)
+    out["rho_bs"] = _project_simplex(w["rho_bs"])               # (46),(56)
+    out["I_s"] = _project_simplex(w["I_s"])                     # (47),(67)
+    out["I_nb"] = _project_simplex(w["I_nb"])                   # (48),(68)
+    out["I_bn"] = _project_simplex(w["I_bn"].T).T               # (49),(68)
+    out["f_n"] = jnp.clip(w["f_n"], cfg.f_min, cfg.f_max)       # (57)
+    out["z_s"] = jnp.clip(w["z_s"], 1e3, cfg.dc_point_capacity)  # (54)
+    out["gamma"] = jnp.clip(w["gamma"], 0.5, gamma_cap)         # (59)
+    out["m"] = jnp.clip(w["m"], 1e-3, 1.0)                      # (58)
+    R = jnp.clip(w["R_bs"], 0.0, jnp.asarray(net.R_bs_max))     # (14)
+    tot = jnp.sum(R, axis=0)
+    scale = jnp.minimum(1.0, jnp.asarray(net.R_s_max) / (tot + 1e-9))
+    out["R_bs"] = R * scale[None, :]                            # (15)
+    out["delta_A"] = jnp.maximum(w["delta_A"], 0.0)             # (60)
+    out["delta_R"] = jnp.maximum(w["delta_R"], 0.0)
+    return out
+
+
+def ownership_masks(net) -> List[Dict]:
+    """One 0/1 mask pytree per node (UEs, then BSs, then DCs).  Shared
+    variables (I_s, delta_A, delta_R) are co-owned by the DCs (their updates
+    are averaged); every other component has exactly one owner."""
+    N, B, S = net.dims
+    masks = []
+
+    def zeros_like_w():
+        return {
+            "rho_nb": np.zeros((N, B)), "rho_bs": np.zeros((B, S)),
+            "f_n": np.zeros((N,)), "z_s": np.zeros((S,)),
+            "gamma": np.zeros((N + S,)), "m": np.zeros((N + S,)),
+            "I_s": np.zeros((S,)), "I_nb": np.zeros((N, B)),
+            "I_bn": np.zeros((B, N)), "R_bs": np.zeros((B, S)),
+            "delta_A": np.zeros(()), "delta_R": np.zeros(()),
+        }
+
+    for n in range(N):
+        m = zeros_like_w()
+        m["rho_nb"][n, :] = 1
+        m["f_n"][n] = 1
+        m["gamma"][n] = 1
+        m["m"][n] = 1
+        m["I_nb"][n, :] = 1
+        masks.append(m)
+    for b in range(B):
+        m = zeros_like_w()
+        m["rho_bs"][b, :] = 1
+        m["I_bn"][b, :] = 1
+        m["R_bs"][b, :] = 1
+        masks.append(m)
+    for s in range(S):
+        m = zeros_like_w()
+        m["z_s"][s] = 1
+        m["gamma"][N + s] = 1
+        m["m"][N + s] = 1
+        m["I_s"][s] = 1            # one simplex coordinate per DC
+        m["delta_A"] = np.ones(()) / S
+        m["delta_R"] = np.ones(()) / S
+        masks.append(m)
+    return [{k: jnp.asarray(v) for k, v in m.items()} for m in masks]
+
+
+class Scaler:
+    """Normalize decision variables to O(1) so the isotropic proximal
+    surrogate (eq. 83) is well-conditioned.  The physical<->normalized maps
+    are linear, so convexity/feasibility arguments are unaffected."""
+
+    def __init__(self, net, gamma_cap: float = 20.0, delta_A_scale=100.0,
+                 delta_R_scale=10.0):
+        cfg = net.cfg
+        self.gamma_cap = gamma_cap
+        self.scale = {
+            "rho_nb": 1.0, "rho_bs": 1.0, "I_s": 1.0, "I_nb": 1.0,
+            "I_bn": 1.0, "m": 1.0,
+            "f_n": cfg.f_max,
+            "z_s": cfg.dc_point_capacity,
+            "gamma": gamma_cap,
+            "R_bs": jnp.asarray(net.R_bs_max),
+            "delta_A": delta_A_scale,
+            "delta_R": delta_R_scale,
+        }
+
+    def to_phys(self, w_norm: Dict) -> Dict:
+        return {k: w_norm[k] * self.scale[k] for k in w_norm}
+
+    def from_phys(self, w_phys: Dict) -> Dict:
+        return {k: w_phys[k] / self.scale[k] for k in w_phys}
+
+
+def round_indicators(w: Dict) -> Dict:
+    """Map relaxed indicators to feasible binaries (argmax rounding),
+    satisfying (47)-(49) and (61)-(62)."""
+    out = dict(w)
+    S = w["I_s"].shape[0]
+    out["I_s"] = jax.nn.one_hot(jnp.argmax(w["I_s"]), S)
+    out["I_nb"] = jax.nn.one_hot(jnp.argmax(w["I_nb"], axis=1),
+                                 w["I_nb"].shape[1])
+    out["I_bn"] = jax.nn.one_hot(jnp.argmax(w["I_bn"], axis=0),
+                                 w["I_bn"].shape[0]).T
+    return out

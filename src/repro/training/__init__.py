@@ -1,0 +1,2 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.training.optim import adamw, sgd  # noqa: F401

@@ -1,0 +1,44 @@
+"""Checkpointing: flat-leaf .npz files with a JSON treedef manifest —
+dependency-free, deterministic, restartable.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def save_checkpoint(path, tree, step: int = 0, metadata: dict = None):
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {}
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = a.astype(np.float32)     # npz can't store bf16; manifest
+        arrays[f"leaf_{i}"] = a          # records the original dtype
+    np.savez(path / "arrays.npz", **arrays)
+    manifest = {
+        "treedef": str(treedef),
+        "num_leaves": len(leaves),
+        "step": step,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "metadata": metadata or {},
+    }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+
+def load_checkpoint(path, like_tree):
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    leaves = [jnp.asarray(data[f"leaf_{i}"]).astype(manifest["dtypes"][i])
+              for i in range(manifest["num_leaves"])]
+    _, treedef = jax.tree_util.tree_flatten(like_tree)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

@@ -1,0 +1,68 @@
+"""Minimal optimizer library (pure pytree transforms, optax-style API).
+
+CE-FL's local training is SGD-based (FedProx); AdamW is provided for the
+standard (non-FL) LM-training example path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable     # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), ()
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        upd = jax.tree_util.tree_map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        z = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda m, v, p: -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            m, v, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

@@ -1,0 +1,87 @@
+"""HLO text analysis: collective-byte accounting for the roofline report.
+
+``cost_analysis()`` gives FLOPs and memory traffic but not collective bytes;
+we parse the compiled HLO and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'bf16[128,1024]' -> bytes."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of operand bytes per collective kind (plus 'total').
+
+    Counts each op's *operand* sizes (the data entering the collective).
+    -start/-done pairs are counted once (on -start; plain ops directly).
+    """
+    totals = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # counted at -start
+        kind = m.group(1)
+        # operand shapes: everything inside the call parens
+        call = line[m.end():]
+        depth = 1
+        args = []
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = call[:i]
+                    break
+        nbytes = sum(shape_bytes(s.group(0))
+                     for s in _SHAPE_RE.finditer(args if isinstance(args, str)
+                                                 else ""))
+        totals[kind] += nbytes
+        counts[kind] += 1
+    out = dict(totals)
+    out["total"] = sum(totals.values())
+    out["counts"] = dict(counts)
+    return out
+
+
+def collective_summary(hlo_text: str) -> str:
+    cb = collective_bytes(hlo_text)
+    parts = [f"{k}: {v/1e9:.3f} GB (n={cb['counts'].get(k, 0)})"
+             for k, v in sorted(cb.items())
+             if k not in ("total", "counts") and v]
+    return "; ".join(parts) + f" | total {cb['total']/1e9:.3f} GB"

@@ -1,0 +1,226 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so scanned
+layer stacks / microbatch accumulation / blocked attention are massively
+under-counted.  Optimized HLO annotates ``known_trip_count`` on while ops;
+this walker parses the HLO text, builds the computation call graph, and
+returns loop-amplified totals:
+
+  flops        — 2 * prod(output dims) * prod(contracting dims) per dot
+  bytes        — per-instruction operand+output buffer traffic, fusions
+                 counted at their boundary (inner ops are loop-local)
+  collectives  — operand bytes per collective kind, amplified
+
+Elementwise FLOPs outside dots are ignored (<5% for these models); both the
+raw cost_analysis numbers and these amplified numbers are reported in
+EXPERIMENTS.md so the amplification factor is visible.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(%[\w.\-]+|ROOT\s+%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+_NAME_RE = re.compile(r"%[\w.\-]+")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "conditional", "call", "after-all",
+                   "partition-id", "replica-id"}
+
+# TPU-fusion-adjusted byte accounting: only ops that move data through HBM
+# on a fused TPU program are charged.  Unfused elementwise chains in the
+# CPU-compiled HLO (add/mul/convert/...) would live inside fusions on TPU,
+# so charging their operands would overcount HBM traffic ~10-40x (see
+# EXPERIMENTS.md §Roofline notes).
+_BYTES_OPS = {"dot", "fusion", "custom-call", "convolution",
+              "dynamic-update-slice", "dynamic-slice", "gather", "scatter",
+              "reduce", "sort", "concatenate", "pad", "slice", "reverse",
+              "copy", "transpose", "cholesky", "triangular-solve",
+              } | set(COLLECTIVE_KINDS)
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    tot = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DTYPE_BYTES.get(dt, 4)
+    return tot
+
+
+class Instr:
+    __slots__ = ("name", "op", "out_shapes", "operands", "line",
+                 "called", "trip")
+
+    def __init__(self, name, op, out_shapes, operands, line, called, trip):
+        self.name, self.op = name, op
+        self.out_shapes, self.operands = out_shapes, operands
+        self.line, self.called, self.trip = line, called, trip
+
+
+_OP_TOKEN_RE = re.compile(r"^([a-z][\w\-]*)\(")
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1).replace("ROOT", "").strip()
+    rhs = m.group(2)
+    # output shape: up to the op token.  rhs = "<shape> <op>(...)..."
+    om = re.search(r"\s([a-z][\w\-]*)\(", rhs)
+    if not om:
+        return None
+    op = om.group(1)
+    out_txt = rhs[:om.start()]
+    out_shapes = _shape_list(out_txt)
+    # operand names: inside the op's parens (first balanced group)
+    rest = rhs[om.end():]
+    depth, args_end = 1, len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args_end = i
+                break
+    operands = _NAME_RE.findall(rest[:args_end])
+    attrs = rest[args_end:]
+    called = []
+    for key in ("body=", "calls=", "to_apply=", "branch_computations="):
+        for mm in re.finditer(re.escape(key) + r"\{?([^,)}\s]+)", attrs):
+            for nm in _NAME_RE.findall(mm.group(0)):
+                called.append((key[:-1], nm))
+    trip = None
+    tm = _TRIP_RE.search(line)
+    if tm:
+        trip = int(tm.group(1))
+    return Instr(name, op, out_shapes, operands, line, called, trip)
+
+
+def parse_module(hlo_text: str):
+    """-> (computations: {name: [Instr]}, entry_name)."""
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            cur = cm.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            comps[cur].append(ins)
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, list]) -> float:
+    out_elems = 1
+    for _, dims in ins.out_shapes:
+        for d in dims:
+            out_elems *= d
+    lhs_entry = shapes.get(ins.operands[0]) if ins.operands else None
+    lhs = lhs_entry[0][1] if lhs_entry else None
+    contract = 1
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if cm and lhs:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs):
+                contract *= lhs[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def amplified_costs(hlo_text: str) -> Dict:
+    comps, entry = parse_module(hlo_text)
+    # symbol tables: output shapes (dtype, dims) per instruction name
+    tables = {}
+    for cname, instrs in comps.items():
+        t = {}
+        for ins in instrs:
+            if ins.out_shapes:
+                t[ins.name] = ins.out_shapes
+        tables[cname] = t
+
+    memo = {}
+    unknown_trips = []
+
+    def cost(cname: str) -> Dict:
+        if cname in memo:
+            return memo[cname]
+        flops = 0.0
+        nbytes = 0.0
+        coll = defaultdict(float)
+        table = tables.get(cname, {})
+        for ins in comps.get(cname, []):
+            base_kind = ins.op.replace("-start", "").replace("-done", "")
+            if ins.op.endswith("-done"):
+                continue
+            if ins.op == "dot":
+                flops += _dot_flops(ins, table)
+            if base_kind in COLLECTIVE_KINDS:
+                ob = sum(_nbytes(table[o]) for o in ins.operands
+                         if o in table)
+                if ob == 0:
+                    ob = _nbytes(ins.out_shapes)
+                coll[base_kind] += ob
+            if base_kind in _BYTES_OPS:
+                opnd_bytes = sum(_nbytes(table[o]) for o in ins.operands
+                                 if o in table)
+                nbytes += opnd_bytes + _nbytes(ins.out_shapes)
+            mult = 1
+            for kind, sub in ins.called:
+                if sub == cname or sub not in comps:
+                    continue
+                sub_cost = cost(sub)
+                if kind == "body":
+                    mult = ins.trip if ins.trip else 1
+                    if ins.trip is None:
+                        unknown_trips.append(ins.name)
+                elif kind == "to_apply":
+                    continue     # scalar reducers: negligible
+                else:
+                    mult = 1
+                flops += mult * sub_cost["flops"]
+                nbytes += mult * sub_cost["bytes"]
+                for k, v in sub_cost["collectives"].items():
+                    coll[k] += mult * v
+        memo[cname] = {"flops": flops, "bytes": nbytes,
+                       "collectives": dict(coll)}
+        return memo[cname]
+
+    total = cost(entry) if entry else {"flops": 0, "bytes": 0,
+                                       "collectives": {}}
+    total = dict(total)
+    total["collective_bytes_total"] = sum(total["collectives"].values())
+    total["unknown_trip_counts"] = unknown_trips
+    return total

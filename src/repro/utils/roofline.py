@@ -1,0 +1,89 @@
+"""Roofline term computation (TPU v5e targets) from dry-run artifacts.
+
+  compute    = HLO_FLOPs / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = collective_bytes / (chips * 50e9 B/s per ICI link)
+
+MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for training;
+2*N*D for single-token decode; 2*N*D_prompt for prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    bytes_per_device: float = 0.0
+
+    @property
+    def compute_s(self):
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self):
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self):
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self):
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def bound_step_time(self):
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu_upper_bound(self):
+        """Model-FLOPs utilization if the dominant term were the step time."""
+        return self.model_flops / (self.bound_step_time * self.chips
+                                   * PEAK_FLOPS + 1e-30)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "mfu_upper_bound": self.mfu_upper_bound,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def model_flops_for(cfg, shape, gamma: int = 1) -> float:
+    """Analytic MODEL_FLOPS per lowered step."""
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens * gamma
+    if shape.mode == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

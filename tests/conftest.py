@@ -1,0 +1,33 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — smoke tests and
+benches run on the single real device; only launch/dryrun.py (run as its own
+process) forces 512 host devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    """O(S^2) reference attention with GQA."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                   k.astype(jnp.float32)) / np.sqrt(D)
+    pos = np.arange(S)
+    kpos = np.arange(k.shape[1])
+    mask = np.ones((S, k.shape[1]), bool)
+    if causal:
+        mask &= pos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)

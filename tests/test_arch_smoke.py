@@ -1,0 +1,83 @@
+"""Per-assigned-architecture smoke tests (assignment requirement):
+REDUCED variant (2 layers, d_model <= 512, <= 4 experts) — one forward +
+one CE-FL train step on CPU, asserting output shapes and no NaNs; plus a
+one-token decode step for decoder archs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.core.round_step import CEFLHyper, build_cefl_round_step, \
+    make_dpu_meta
+from repro.models import lm as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batchify(cfg, B=2, S=32):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.is_encdec:
+        batch["enc_embed"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = L.init_lm_params(KEY, cfg, jnp.float32)
+    B, S = 2, 32
+    batch = _batchify(cfg, B, S)
+
+    # forward: backbone output shape + finite loss
+    x = L.embed_tokens(params, cfg, batch["tokens"])
+    assert x.shape == (B, S, cfg.d_model)
+    loss, aux = L.lm_loss(params, cfg, batch, remat=False,
+                          q_block=16, kv_block=16)
+    assert loss.shape == () and bool(jnp.isfinite(loss)), arch
+
+    # one CE-FL train step (2 DPUs, heterogeneous gamma)
+    def loss_fn(p, micro, mask):
+        return L.lm_loss(p, cfg, micro, example_mask=mask, remat=True,
+                         q_block=16, kv_block=16)
+
+    step = build_cefl_round_step(loss_fn, CEFLHyper(
+        eta=1e-2, mu=0.01, theta=1.0, gamma_max=2, n_micro=1))
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (2,) + l.shape), params)
+    bb = jax.tree_util.tree_map(
+        lambda v: jnp.stack([v, v])[:, None], batch)
+    meta = make_dpu_meta(2, gammas=[2, 1], m_fracs=[1.0, 0.5])
+    new_params, metrics = jax.jit(step)(stacked, bb, meta)
+    assert bool(jnp.isfinite(metrics["loss"])), arch
+    for leaf, old in zip(jax.tree_util.tree_leaves(new_params),
+                         jax.tree_util.tree_leaves(stacked)):
+        assert leaf.shape == old.shape
+        assert bool(jnp.all(jnp.isfinite(leaf))), arch
+    # params actually moved
+    delta = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(new_params),
+        jax.tree_util.tree_leaves(stacked)))
+    assert delta > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "qwen3-32b",
+                                  "jamba-v0.1-52b", "whisper-medium",
+                                  "starcoder2-15b"])
+def test_reduced_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    params = L.init_lm_params(KEY, cfg, jnp.float32)
+    B, cache_len = 2, 64
+    cache = L.init_cache(cfg, B, cache_len, jnp.float32)
+    tokens = jax.random.randint(KEY, (B,), 0, cfg.vocab_size)
+    logits, new_cache = L.lm_decode_step(params, cfg, tokens, cache)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(new_cache["pos"]) == 1

@@ -1,0 +1,119 @@
+"""Theorem 1 / Corollary 1 / Proposition 1 properties (hypothesis-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import estimation, fedprox
+from repro.core.convergence import (MLConstants, a_norm_stats,
+                                    corollary_bound, step_size_condition,
+                                    theorem1_bound)
+
+
+def _consts(n=5, theta=2.0, sigma=1.5, z2=1.0):
+    return MLConstants(L=4.0, theta_i=np.full(n, theta),
+                       sigma_i=np.full(n, sigma), zeta1=2.0, zeta2=z2,
+                       F0_gap=2.3)
+
+
+def _bound(m=0.5, gamma=2.0, drift=10.0, theta_i=2.0, n=5, D=2000.0):
+    c = _consts(n, theta=theta_i)
+    return theorem1_bound(
+        consts=c, p_i=np.full(n, 1 / n), D_i=np.full(n, D),
+        m_i=np.full(n, m), gamma_i=np.full(n, gamma),
+        tau_sum_drift=drift, eta=1e-2, theta=1.0, T=50)["total"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.floats(0.05, 1.0), gamma=st.floats(1.0, 10.0),
+       drift=st.floats(0.0, 100.0))
+def test_bound_positive(m, gamma, drift):
+    assert _bound(m=m, gamma=gamma, drift=drift) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.floats(0.05, 0.9))
+def test_bound_decreases_with_minibatch_ratio(m):
+    assert _bound(m=m + 0.05) <= _bound(m=m) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(th=st.floats(0.5, 5.0))
+def test_bound_increases_with_variability(th):
+    assert _bound(theta_i=th + 0.5) >= _bound(theta_i=th) - 1e-9
+
+
+def test_bound_increases_with_drift():
+    assert _bound(drift=50) > _bound(drift=5)
+
+
+def test_heterogeneity_term_grows_with_gamma():
+    c = _consts(z2=5.0)
+    b1 = theorem1_bound(consts=c, p_i=np.full(5, .2), D_i=np.full(5, 2000.),
+                        m_i=np.full(5, .5), gamma_i=np.full(5, 2.),
+                        tau_sum_drift=0, eta=1e-2, theta=1., T=50)
+    b2 = theorem1_bound(consts=c, p_i=np.full(5, .2), D_i=np.full(5, 2000.),
+                        m_i=np.full(5, .5), gamma_i=np.full(5, 8.),
+                        tau_sum_drift=0, eta=1e-2, theta=1., T=50)
+    assert b2["heterogeneity"] > b1["heterogeneity"]
+
+
+def test_corollary_rate_is_one_over_sqrt_T():
+    # gamma_bar: per-round total local iterations (bounded in T; with the
+    # literal cumulative reading the first term of eq. 33 would be O(1))
+    c = _consts()
+    vals = []
+    for T in (100, 400):
+        d, gbar = 5, 5 * 2.0
+        vals.append(corollary_bound(consts=c, d=d, gamma_bar=gbar, T=T,
+                                    theta=1.0, tau_tilde=1.0, m_min=0.5,
+                                    gamma_max=2.0))
+    # quadrupling T should roughly halve the bound (dominant 1/sqrt(T))
+    assert vals[1] < vals[0] * 0.75
+
+
+def test_a_norm_stats_match_explicit():
+    a = fedprox.a_coefficients(5, 0.05, 0.2)
+    a1, a2, alast = a_norm_stats(5, 0.05, 0.2)
+    np.testing.assert_allclose(a1, float(jnp.sum(a)), rtol=1e-6)
+    np.testing.assert_allclose(a2, float(jnp.sum(a * a)), rtol=1e-6)
+    np.testing.assert_allclose(alast, float(a[-1]), rtol=1e-6)
+
+
+def test_step_size_condition_monotone():
+    assert step_size_condition([2.0], eta=1e-3, mu=0.01, L=1.0, zeta1=1.0)
+    assert not step_size_condition([50.0], eta=1.0, mu=0.01, L=10.0,
+                                   zeta1=5.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.floats(0.1, 1.0), D=st.integers(10, 500))
+def test_prop1_variance_bound_holds_empirically(m, D):
+    """Empirical SGD variance (without replacement) <= Prop. 1 bound for a
+    linear model where Theta is exact."""
+    rng = np.random.RandomState(0)
+    xs = rng.randn(D, 4).astype(np.float32)
+    # linear regression loss grad per example: (w.x - 0) x -> grad = x x^T w
+    w = rng.randn(4).astype(np.float32)
+
+    def grad_of(idx):
+        X = xs[idx]
+        return (X @ w)[:, None] * X   # per-example grads (n, 4)
+
+    full = grad_of(np.arange(D)).mean(0)
+    bsz = max(1, int(round(m * D)))
+    trials = []
+    for t in range(200):
+        idx = rng.choice(D, bsz, replace=False)
+        g = grad_of(idx).mean(0)
+        trials.append(np.sum((g - full) ** 2))
+    emp = np.mean(trials)
+    # Theta: Lipschitz const of grad wrt example = max ||grad diff||/||x diff||
+    G = grad_of(np.arange(D))
+    num = np.linalg.norm(G[:, None] - G[None], axis=-1)
+    den = np.linalg.norm(xs[:, None] - xs[None], axis=-1) + 1e-12
+    theta = float((num / den).max())
+    sigma2 = float(np.mean(np.sum((xs - xs.mean(0)) ** 2, axis=1)))
+    bound = estimation.sgd_variance_bound(bsz / D, D, np.sqrt(sigma2), theta)
+    assert emp <= bound * 1.05 + 1e-9, (emp, bound)

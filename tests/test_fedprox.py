@@ -1,0 +1,127 @@
+"""FedProx local-training math (paper eqs. 5-11)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cefl_paper import ClassifierConfig
+from repro.core import aggregation, fedprox
+from repro.core.round_step import CEFLHyper, build_cefl_round_step, \
+    make_dpu_meta
+from repro.models.classifier import classifier_loss, init_classifier_params
+
+CFG = ClassifierConfig(input_shape=(6, 6, 1), hidden=(16,))
+KEY = jax.random.PRNGKey(0)
+
+
+def _data(n=16, seed=1):
+    k = jax.random.PRNGKey(seed)
+    return {"x": jax.random.normal(k, (n, 6, 6, 1)),
+            "y": jax.random.randint(k, (n,), 0, 10)}
+
+
+def test_a_coefficients():
+    a = fedprox.a_coefficients(4, eta=0.1, mu=0.5)
+    r = 1 - 0.1 * 0.5
+    np.testing.assert_allclose(a, [r ** 3, r ** 2, r, 1.0], rtol=1e-6)
+
+
+def test_eq9_identity_mu0():
+    """eq. (9): with mu=0, sum_l a_l grad F == (x^t - x^{t,gamma})/eta."""
+    p0 = init_classifier_params(KEY, CFG)
+    data = _data()
+    res = fedprox.local_train(p0, classifier_loss, data, gamma=3,
+                              m_frac=1.0, eta=0.05, mu=0.0, key=KEY)
+    dev = fedprox.verify_accumulation_identity(p0, res, eta=0.05, mu=0.0)
+    assert dev < 1e-4, dev
+
+
+def test_prox_pulls_toward_anchor():
+    """Large mu keeps the local model closer to the anchor."""
+    p0 = init_classifier_params(KEY, CFG)
+    data = _data()
+
+    def dist(mu):
+        res = fedprox.local_train(p0, classifier_loss, data, gamma=5,
+                                  m_frac=1.0, eta=0.1, mu=mu, key=KEY)
+        return sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(
+            jax.tree_util.tree_leaves(res.params),
+            jax.tree_util.tree_leaves(p0)))
+
+    assert dist(5.0) < dist(0.0)
+
+
+def test_aggregate_eq11():
+    p0 = init_classifier_params(KEY, CFG)
+    d1 = jax.tree_util.tree_map(jnp.ones_like, p0)
+    d2 = jax.tree_util.tree_map(lambda x: 2 * jnp.ones_like(x), p0)
+    out = aggregation.aggregate(p0, [d1, d2], [100, 300], theta=2.0, eta=0.1)
+    # weighted mean d = (100*1 + 300*2)/400 = 1.75; update = -0.2*1.75
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(p0)):
+        np.testing.assert_allclose(a, b - 0.35, rtol=1e-5)
+
+
+def test_bs_relay_sum_preserves_total():
+    p0 = init_classifier_params(KEY, CFG)
+    grads = [jax.tree_util.tree_map(lambda x: jnp.full_like(x, i + 1.0), p0)
+             for i in range(4)]
+    relayed = aggregation.bs_relay_sum(grads, [[0, 2], [1], [3]])
+    tot = relayed[0]
+    for r in relayed[1:]:
+        tot = jax.tree_util.tree_map(jnp.add, tot, r)
+    direct = grads[0]
+    for g in grads[1:]:
+        direct = jax.tree_util.tree_map(jnp.add, direct, g)
+    for a, b in zip(jax.tree_util.tree_leaves(tot),
+                    jax.tree_util.tree_leaves(direct)):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_mesh_round_equals_simulation():
+    """The jittable SPMD round (round_step) must equal local_train +
+    aggregate exactly (full batch => deterministic)."""
+    p0 = init_classifier_params(KEY, CFG)
+    n_dpu, mb = 2, 8
+    x = jax.random.normal(KEY, (n_dpu, 1, mb, 6, 6, 1))
+    y = jax.random.randint(KEY, (n_dpu, 1, mb), 0, 10)
+
+    def loss_fn(p, micro, mask):
+        return classifier_loss(p, {"x": micro["x"], "y": micro["y"]},
+                               mask), {}
+
+    hyper = CEFLHyper(eta=0.05, mu=0.01, theta=1.0, gamma_max=3, n_micro=1)
+    step = build_cefl_round_step(loss_fn, hyper)
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (n_dpu,) + l.shape), p0)
+    meta = make_dpu_meta(n_dpu, gammas=[3, 2], m_fracs=[1.0, 1.0],
+                         weights=[0.5, 0.5])
+    new_params, _ = jax.jit(step)(stacked, {"x": x, "y": y}, meta)
+
+    results = []
+    for i, g in enumerate([3, 2]):
+        r = fedprox.local_train(p0, classifier_loss,
+                                {"x": x[i, 0], "y": y[i, 0]},
+                                gamma=g, m_frac=1.0, eta=0.05, mu=0.01,
+                                key=KEY)
+        results.append(r)
+    ref = aggregation.aggregate(p0, [r.d_i for r in results], [8, 8],
+                                theta=1.0, eta=0.05)
+    for k in ref:
+        np.testing.assert_allclose(new_params[k][0], ref[k], atol=2e-6)
+
+
+def test_fednova_vs_fedavg_one_step_equivalence():
+    """With gamma=1 and equal weights, FedNova reduces to FedAvg on the
+    same gradients."""
+    p0 = init_classifier_params(KEY, CFG)
+    data = [_data(seed=s) for s in range(3)]
+    res = [fedprox.local_train(p0, classifier_loss, d, gamma=1, m_frac=1.0,
+                               eta=0.1, mu=0.0, key=KEY) for d in data]
+    w = [r.num_examples for r in res]
+    nova = aggregation.fednova_aggregate(p0, [r.d_i for r in res], w,
+                                         [1, 1, 1], eta=0.1)
+    avg = aggregation.fedavg_aggregate([r.params for r in res], w)
+    for a, b in zip(jax.tree_util.tree_leaves(nova),
+                    jax.tree_util.tree_leaves(avg)):
+        np.testing.assert_allclose(a, b, atol=1e-5)

@@ -1,0 +1,82 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (ref.py),
+interpret=True on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fedprox_update import LANE, ROWS, fedprox_update_2d
+from repro.kernels.nova_aggregate import nova_aggregate_2d
+from repro.kernels.swa_decode_attention import swa_decode_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows", [ROWS, 2 * ROWS])
+def test_fedprox_kernel_sweep(dtype, rows):
+    x = jax.random.normal(KEY, (rows, LANE)).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), (rows, LANE)).astype(dtype)
+    a = jax.random.normal(jax.random.PRNGKey(2), (rows, LANE)).astype(dtype)
+    out = fedprox_update_2d(x, g, a, 0.1, 0.05, interpret=True)
+    exp = ref.fedprox_update_ref(x, g, a, 0.1, 0.05)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("n_dpu", [1, 2, 5])
+def test_nova_kernel_sweep(n_dpu):
+    from repro.kernels.nova_aggregate import LANE as NL, ROWS as NR
+    x = jax.random.normal(KEY, (NR, NL))
+    d = jax.random.normal(jax.random.PRNGKey(1), (n_dpu, NR, NL))
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (n_dpu,))) + 0.1
+    wn = w / jnp.sum(w)
+    out = nova_aggregate_2d(x, d, wn, 0.05, interpret=True)
+    exp = ref.nova_aggregate_ref(x, d, wn, 0.05)
+    np.testing.assert_allclose(out, exp, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 8, 2, 32, 256), (1, 4, 4, 16, 128)])
+@pytest.mark.parametrize("cache_len_frac", [0.4, 1.0])
+def test_swa_decode_kernel_sweep(dtype, shape, cache_len_frac):
+    B, Hq, Hkv, D, S = shape
+    cache_len = max(1, int(S * cache_len_frac))
+    q = jax.random.normal(KEY, (B, Hq, D)).astype(dtype)
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D)).astype(dtype)
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D)).astype(dtype)
+    out = swa_decode_attention(q, kc, vc, cache_len, chunk=64,
+                               interpret=True)
+    exp = ref.swa_decode_attention_ref(q, kc, vc, cache_len)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+def test_ops_pytree_roundtrip():
+    params = {"w": jax.random.normal(KEY, (37, 13)),
+              "b": jax.random.normal(KEY, (7,)),
+              "nested": {"u": jax.random.normal(KEY, (2, 3, 5))}}
+    grads = jax.tree_util.tree_map(lambda x: 0.3 * x, params)
+    anchor = jax.tree_util.tree_map(lambda x: 0.7 * x, params)
+    out = ops.fedprox_update(params, grads, anchor, 0.1, 0.2)
+    exp = jax.tree_util.tree_map(
+        lambda x, g, a: ref.fedprox_update_ref(x, g, a, 0.1, 0.2),
+        params, grads, anchor)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(exp)):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_ops_nova_matches_aggregation_module():
+    """Kernel wrapper == repro.core.aggregation.aggregate on pytrees."""
+    from repro.core.aggregation import aggregate
+    params = {"w": jax.random.normal(KEY, (33, 9))}
+    ds = [jax.tree_util.tree_map(lambda x: (i + 1) * 0.1 * x, params)
+          for i in range(3)]
+    out = ops.nova_aggregate(params, ds, [1.0, 2.0, 1.0], 0.02)
+    exp = aggregate(params, ds, [1.0, 2.0, 1.0], theta=1.0, eta=0.02)
+    np.testing.assert_allclose(out["w"], exp["w"], atol=1e-5)

@@ -1,0 +1,97 @@
+"""Network substrate: topology generation, data configuration conservation,
+delay/energy model sanity (eqs. 12-40)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.network import (NetworkConfig, data_configuration, make_network,
+                           network_costs, round_delay, round_energy)
+from repro.solver.variables import init_w, project
+
+NET = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2))
+D_BAR = np.full(6, 1000.0)
+
+
+def test_topology_invariants():
+    N, B, S = NET.dims
+    assert NET.R_nb.shape == (N, B) and (NET.R_nb > 0).all()
+    A = NET.adjacency
+    assert (A == A.T).all()
+    # every UE reaches a BS; every BS reaches a DC; DCs interconnected
+    assert A[:N, N:N + B].sum(axis=1).min() >= 1
+    assert A[N:N + B, N + B:].sum(axis=1).min() >= 1
+    assert (A[N + B:, N + B:].sum(axis=1) >= 1).all()
+
+
+def test_intra_subnet_rates_higher():
+    N, B, S = NET.dims
+    intra, inter = [], []
+    for n in range(N):
+        for b in range(B):
+            (intra if NET.subnet_of_ue[n] == NET.subnet_of_bs[b]
+             else inter).append(NET.R_nb[n, b])
+    assert np.mean(intra) > np.mean(inter)
+
+
+@settings(max_examples=20, deadline=None)
+@given(frac=st.floats(0.0, 0.9))
+def test_data_conservation(frac):
+    """Offloading moves points but never creates/destroys them (16)-(18)."""
+    w = project(init_w(NET, D_BAR), NET)
+    w = dict(w)
+    w["rho_nb"] = jnp.full_like(w["rho_nb"], frac / 3)  # row sums = frac
+    D_n, D_b, D_s = data_configuration(w, jnp.asarray(D_BAR))
+    np.testing.assert_allclose(float(jnp.sum(D_n) + jnp.sum(D_s)),
+                               D_BAR.sum(), rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(D_b)), float(jnp.sum(D_s)),
+                               rtol=1e-5)
+
+
+def test_more_offloading_more_transfer_delay():
+    w0 = project(init_w(NET, D_BAR), NET)
+    w1 = dict(w0)
+    w1["rho_nb"] = jnp.full_like(w0["rho_nb"], 0.3)
+    w1 = project(w1, NET)
+    c0 = network_costs(w0, NET, D_BAR)
+    c1 = network_costs(w1, NET, D_BAR)
+    assert float(jnp.sum(c1["d_nb_D"])) > float(jnp.sum(c0["d_nb_D"]))
+
+
+def test_processing_energy_scales_with_frequency():
+    w = project(init_w(NET, D_BAR), NET)
+    lo = dict(w); lo["f_n"] = jnp.full_like(w["f_n"], 1e7)
+    hi = dict(w); hi["f_n"] = jnp.full_like(w["f_n"], 1e9)
+    c_lo = network_costs(lo, NET, D_BAR)
+    c_hi = network_costs(hi, NET, D_BAR)
+    assert float(jnp.sum(c_hi["E_n_P"])) > float(jnp.sum(c_lo["E_n_P"]))
+    assert float(jnp.sum(c_hi["d_n_P"])) < float(jnp.sum(c_lo["d_n_P"]))
+
+
+def test_aggregator_choice_changes_delay():
+    w = project(init_w(NET, D_BAR), NET)
+    delays = []
+    for s in range(NET.cfg.num_dc):
+        ws = dict(w)
+        ws["I_s"] = jnp.zeros(NET.cfg.num_dc).at[s].set(1.0)
+        c = network_costs(ws, NET, D_BAR)
+        delays.append(float(c["delta_A_req"] + c["delta_R_req"]))
+    assert max(delays) > min(delays)   # the floating point matters
+
+
+def test_costs_nonnegative_and_finite():
+    w = project(init_w(NET, D_BAR), NET)
+    c = network_costs(w, NET, D_BAR)
+    for k, v in c.items():
+        arr = np.asarray(v)
+        assert np.all(np.isfinite(arr)), k
+        assert np.all(arr >= -1e-6), k
+    assert round_delay(c) > 0
+    assert round_energy(c) > 0
+
+
+def test_resample_preserves_shapes():
+    rng = np.random.RandomState(0)
+    net2 = NET.resample_rates(rng, 0.2)
+    assert net2.R_nb.shape == NET.R_nb.shape
+    assert not np.allclose(net2.R_nb, NET.R_nb)

@@ -1,0 +1,132 @@
+"""Distributed solver (Algorithms 1-3): projections, consensus, SCA
+monotonic improvement, centralized-vs-distributed agreement, rounding."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.convergence import MLConstants
+from repro.network import NetworkConfig, make_network
+from repro.solver import (ObjectiveWeights, PDHyper, consensus_error,
+                          consensus_rounds, consensus_weights,
+                          constraint_vector, objective, solve)
+from repro.solver.greedy import (datapoint_greedy, e2e_rate, heuristic_base,
+                                 rate_greedy)
+from repro.solver.variables import (Scaler, _project_simplex,
+                                    _project_simplex_ineq, init_w,
+                                    ownership_masks, project,
+                                    round_indicators)
+
+NET = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2))
+D_BAR = np.full(6, 1000.0)
+CONSTS = MLConstants(L=4.0, theta_i=np.ones(8) * 2, sigma_i=np.ones(8),
+                     zeta1=2.0, zeta2=1.0)
+OW = ObjectiveWeights()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-5, 5), min_size=3, max_size=8))
+def test_simplex_projection_properties(vals):
+    v = jnp.asarray([vals])
+    p = _project_simplex(v)
+    assert float(jnp.min(p)) >= -1e-6
+    np.testing.assert_allclose(float(jnp.sum(p)), 1.0, atol=1e-5)
+    # idempotent
+    np.testing.assert_allclose(p, _project_simplex(p), atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-5, 5), min_size=3, max_size=8))
+def test_simplex_ineq_projection(vals):
+    v = jnp.asarray([vals])
+    p = _project_simplex_ineq(v)
+    assert float(jnp.min(p)) >= -1e-6
+    assert float(jnp.sum(p)) <= 1.0 + 1e-5
+    # points already inside are untouched
+    inside = jnp.clip(v, 0.0, None)
+    inside = inside / jnp.maximum(jnp.sum(inside), 2.0)
+    np.testing.assert_allclose(_project_simplex_ineq(inside), inside,
+                               atol=1e-6)
+
+
+def test_project_feasibility():
+    w = init_w(NET, D_BAR)
+    w = {k: v + 10.0 for k, v in w.items()}           # blow everything up
+    p = project(w, NET)
+    assert float(jnp.max(jnp.sum(p["rho_nb"], 1))) <= 1 + 1e-5
+    np.testing.assert_allclose(np.asarray(jnp.sum(p["rho_bs"], 1)), 1.0,
+                               atol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(p["I_s"])), 1.0, atol=1e-5)
+    assert float(jnp.max(p["R_bs"] - np.asarray(NET.R_bs_max))) <= 1e-3
+    cap = np.asarray(jnp.sum(p["R_bs"], 0)) - NET.R_s_max
+    assert cap.max() <= 1e-3
+
+
+def test_ownership_masks_partition():
+    masks = ownership_masks(NET)
+    total = {}
+    for m in masks:
+        for k, v in m.items():
+            total[k] = total.get(k, 0) + np.asarray(v, dtype=float)
+    for k, v in total.items():
+        np.testing.assert_allclose(v, np.ones_like(v), atol=1e-6,
+                                   err_msg=k)
+
+
+def test_scaler_roundtrip():
+    sc = Scaler(NET)
+    w = project(init_w(NET, D_BAR), NET)
+    back = sc.to_phys(sc.from_phys(w))
+    for k in w:
+        np.testing.assert_allclose(np.asarray(back[k]), np.asarray(w[k]),
+                                   rtol=1e-6)
+
+
+def test_consensus_converges_to_mean():
+    W = consensus_weights(NET.adjacency)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-9)
+    vals = np.random.RandomState(0).randn(NET.node_count(), 4)
+    e0 = consensus_error(vals)
+    out = consensus_rounds(vals, W, 3000)
+    np.testing.assert_allclose(
+        out, np.broadcast_to(vals.mean(0, keepdims=True), out.shape),
+        atol=1e-2)
+    # strictly contracting after a few rounds
+    e30 = consensus_error(consensus_rounds(vals, W, 30))
+    assert e30 < e0
+
+
+def test_sca_centralized_decreases():
+    res = solve(NET, D_BAR, CONSTS, OW, distributed=False, max_outer=5)
+    assert res.objective_history[-1] < res.objective_history[0]
+
+
+def test_sca_distributed_tracks_centralized():
+    res_c = solve(NET, D_BAR, CONSTS, OW, distributed=False, max_outer=6)
+    res_d = solve(NET, D_BAR, CONSTS, OW, distributed=True, max_outer=6,
+                  pd=PDHyper(max_iters=3, consensus_rounds=40))
+    assert res_d.objective_history[-1] < res_d.objective_history[0]
+    gap = abs(res_d.objective_history[-1] - res_c.objective_history[-1])
+    assert gap / abs(res_c.objective_history[-1]) < 0.5
+
+
+def test_rounded_solution_feasible():
+    res = solve(NET, D_BAR, CONSTS, OW, distributed=False, max_outer=3)
+    w = res.w_rounded
+    assert set(np.unique(np.asarray(w["I_s"]))) <= {0.0, 1.0}
+    assert float(jnp.sum(w["I_s"])) == 1.0
+    viol = float(jnp.max(constraint_vector(w, NET, D_BAR)))
+    assert viol <= 1e-3, viol
+
+
+def test_greedy_baselines():
+    base = heuristic_base(NET, D_BAR)
+    wd = datapoint_greedy(NET, D_BAR, base)
+    wr = rate_greedy(NET, D_BAR, base)
+    assert float(jnp.sum(wd["I_s"])) == 1.0
+    assert float(jnp.sum(wr["I_s"])) == 1.0
+    assert e2e_rate(NET).shape == (6, 2)
+    # skewing data toward subnet 1 flips the datapoint-greedy choice
+    skew = np.array([1, 1, 1, 1, 5000, 5000.0]) * 100
+    w2 = datapoint_greedy(NET, skew, base)
+    assert int(jnp.argmax(w2["I_s"])) == NET.subnet_of_ue[-1]

@@ -1,0 +1,118 @@
+"""End-to-end behaviour tests: CE-FL orchestration improves the model while
+keeping costs accounted; baselines run; estimation feeds the solver;
+decode == forward consistency across families (the 'system works' tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.cefl_paper import ClassifierConfig
+from repro.core import CEFLOptions, MLConstants, run_cefl
+from repro.core.estimation import estimate_constants
+from repro.data import make_image_dataset, make_online_ues
+from repro.models import lm as L
+from repro.models.classifier import (classifier_accuracy, classifier_loss,
+                                     init_classifier_params)
+from repro.network import NetworkConfig, make_network
+from repro.solver import ObjectiveWeights
+
+NET = make_network(NetworkConfig(num_ue=4, num_bs=2, num_dc=2))
+(TRX, TRY), (TEX, TEY) = make_image_dataset(2500, (10, 10, 1))
+CCFG = ClassifierConfig(input_shape=(10, 10, 1), hidden=(32,))
+P0 = init_classifier_params(jax.random.PRNGKey(0), CCFG)
+CONSTS = MLConstants(L=5.0, theta_i=np.ones(6) * 2, sigma_i=np.ones(6) * 3,
+                     zeta1=2.0, zeta2=1.0)
+
+
+def _eval(p):
+    return classifier_accuracy(p, jnp.asarray(TEX[:300]),
+                               jnp.asarray(TEY[:300]))
+
+
+def _run(strategy, rounds=5):
+    ues = make_online_ues(TRX, TRY, num_ue=4, mean_arrivals=200,
+                          std_arrivals=20)
+    opts = CEFLOptions(rounds=rounds, strategy=strategy, eta=0.1,
+                       solver_outer=2, reoptimize_every=3)
+    return run_cefl(NET, ues, init_params=P0, loss_fn=classifier_loss,
+                    eval_fn=_eval, consts=CONSTS, ow=ObjectiveWeights(),
+                    opts=opts)
+
+
+def test_cefl_learns_and_accounts_costs():
+    h = _run("cefl")
+    assert h["acc"][-1] > h["acc"][0]
+    assert h["cum_energy"][-1] > 0 and h["cum_delay"][-1] > 0
+    assert len(h["aggregator"]) == 5
+
+
+@pytest.mark.parametrize("strategy", ["fednova", "fedavg", "greedy_data",
+                                      "greedy_rate", "fixed:0"])
+def test_baselines_run_and_learn(strategy):
+    h = _run(strategy, rounds=3)
+    assert np.isfinite(h["acc"]).all()
+    assert h["acc"][-1] >= h["acc"][0] - 0.05
+
+
+def test_cefl_offloading_uses_dcs():
+    h = _run("cefl", rounds=3)
+    assert max(sum(p) for p in h["dc_points"]) > 0   # data reached the DCs
+
+
+def test_estimation_feeds_solver():
+    ues = make_online_ues(TRX, TRY, num_ue=4, mean_arrivals=150,
+                          std_arrivals=10)
+    datasets = [ds.step() for ds in ues]
+    c = estimate_constants(classifier_loss, P0, datasets,
+                           key=jax.random.PRNGKey(1), iters=2)
+    assert c.L > 0 and c.zeta1 >= 1.0 and c.zeta2 >= 0.0
+    assert (c.theta_i > 0).all() and (c.sigma_i > 0).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "mamba2-130m",
+                                  "llama4-maverick-400b-a17b"])
+def test_decode_matches_forward(arch):
+    """prefill + decode steps reproduce teacher-forced logits."""
+    cfg = reduced(get_config(arch))
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    p = L.init_lm_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S, S0 = 2, 24, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    x = L.embed_tokens(p, cfg, tokens)
+    xb, _ = L.lm_backbone(p, cfg, x, remat=False, q_block=8, kv_block=8)
+    full = L.unembed(p, cfg, xb)
+    lg, cache = L.prefill(p, cfg, tokens[:, :S0], cache_len=S,
+                          q_block=8, kv_block=8)
+    np.testing.assert_allclose(lg, full[:, S0 - 1], atol=3e-4)
+    step = jax.jit(lambda tok, c: L.lm_decode_step(p, cfg, tok, c))
+    for t in range(S0, S):
+        lg, cache = step(tokens[:, t], cache)
+    np.testing.assert_allclose(lg, full[:, -1], atol=3e-4)
+
+
+def test_train_launcher_decreases_loss():
+    from repro.launch.train import main as train_main
+    losses = train_main(["--arch", "mamba2-130m", "--reduced", "--steps",
+                         "5", "--batch", "4", "--seq", "64", "--n-dpu", "2",
+                         "--gamma", "2"])
+    assert losses[-1] < losses[0]
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.training import load_checkpoint, save_checkpoint
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": {"c": jnp.ones((4,))}}
+    save_checkpoint(tmp_path / "ck", tree, step=7)
+    back, step = load_checkpoint(tmp_path / "ck", tree)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
