@@ -8,7 +8,7 @@ import time
 import numpy as np
 
 from benchmarks.common import QUICK, csv_line, setup
-from repro.core import CEFLOptions, run_cefl
+from repro.core import Engine, EngineOptions
 from repro.solver.greedy import e2e_rate, subnet_datapoints
 
 
@@ -19,12 +19,12 @@ def main():
     t0 = time.time()
     results = {}
     for strat in ("cefl", "greedy_data", "greedy_rate", "fixed:0"):
-        opts = CEFLOptions(rounds=rounds, strategy=strat, eta=0.1,
-                           solver_outer=2, reoptimize_every=1, seed=0)
-        results[strat] = run_cefl(
-            net, s["make_ues"](drift_labels=True), init_params=s["p0"],
-            loss_fn=s["loss_fn"], eval_fn=s["eval_fn"], consts=s["consts"],
-            ow=s["ow"], opts=opts)
+        opts = EngineOptions(rounds=rounds, eta=0.1, solver_outer=2,
+                             reoptimize_every=1, seed=0)
+        results[strat] = Engine(
+            net, strat, consts=s["consts"], ow=s["ow"], opts=opts).run(
+            s["make_ues"](drift_labels=True), init_params=s["p0"],
+            loss_fn=s["loss_fn"], eval_fn=s["eval_fn"]).to_history()
 
     print("\n== Fig. 3: aggregator switching pattern ==")
     print("round | " + " | ".join(f"{k:12s}" for k in results))
@@ -45,11 +45,11 @@ def main():
     print("\n== Fig. 4: delay & energy vs aggregation strategy ==")
     fixed_E, fixed_D = [], []
     for sdx in range(net.cfg.num_dc):
-        opts = CEFLOptions(rounds=3, strategy=f"fixed:{sdx}", eta=0.1,
-                           reoptimize_every=1, seed=0)
-        h = run_cefl(net, s["make_ues"](seed_off=sdx), init_params=s["p0"],
-                     loss_fn=s["loss_fn"], eval_fn=s["eval_fn"],
-                     consts=s["consts"], ow=s["ow"], opts=opts)
+        opts = EngineOptions(rounds=3, eta=0.1, reoptimize_every=1, seed=0)
+        h = Engine(net, f"fixed:{sdx}", consts=s["consts"], ow=s["ow"],
+                   opts=opts).run(
+            s["make_ues"](seed_off=sdx), init_params=s["p0"],
+            loss_fn=s["loss_fn"], eval_fn=s["eval_fn"]).to_history()
         fixed_E.append(h["cum_energy"][-1] / 3)
         fixed_D.append(h["cum_delay"][-1] / 3)
     per_round = {k: (v["cum_energy"][-1] / rounds,

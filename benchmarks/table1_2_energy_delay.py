@@ -9,7 +9,7 @@ import time
 import numpy as np
 
 from benchmarks.common import QUICK, csv_line, setup
-from repro.core import CEFLOptions, run_cefl
+from repro.core import Engine, EngineOptions
 
 
 def first_reach(hist, targets):
@@ -29,12 +29,13 @@ def run(dataset="fmnist", targets=(0.4, 0.5, 0.6), seed=0):
     rows = {}
     t0 = time.time()
     for strat in ("cefl", "fednova", "fedavg"):
-        opts = CEFLOptions(rounds=rounds, strategy=strat, eta=0.1,
-                           solver_outer=2 if QUICK else 4,
-                           reoptimize_every=3, seed=seed)
-        h = run_cefl(s["net"], s["make_ues"](), init_params=s["p0"],
-                     loss_fn=s["loss_fn"], eval_fn=s["eval_fn"],
-                     consts=s["consts"], ow=s["ow"], opts=opts)
+        opts = EngineOptions(rounds=rounds, eta=0.1,
+                             solver_outer=2 if QUICK else 4,
+                             reoptimize_every=3, seed=seed)
+        h = Engine(s["net"], strat, consts=s["consts"], ow=s["ow"],
+                   opts=opts).run(
+            s["make_ues"](), init_params=s["p0"], loss_fn=s["loss_fn"],
+            eval_fn=s["eval_fn"]).to_history()
         rows[strat] = {"hist": h, "reach": first_reach(h, targets)}
     elapsed = time.time() - t0
     return rows, targets, elapsed

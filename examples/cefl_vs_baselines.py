@@ -1,16 +1,19 @@
 """End-to-end driver: parameter estimation (Algs. 4-6) -> network-aware
 CE-FL vs FedNova vs FedAvg on the paper's full-size 20/10/5 network, with
-per-strategy accuracy / energy / delay curves (Tables I-II style).
+per-strategy accuracy / energy / delay curves (Tables I-II style), driven
+through the typed orchestration Engine (docs/orchestration.md).
 
   PYTHONPATH=src python examples/cefl_vs_baselines.py [--rounds 20] [--full]
 """
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.cefl_paper import ClassifierConfig
-from repro.core import CEFLOptions, run_cefl
+from repro.core import Engine, EngineOptions
 from repro.core.estimation import estimate_constants
 from repro.data import make_image_dataset, make_online_ues
 from repro.models.classifier import (classifier_accuracy, classifier_loss,
@@ -45,6 +48,14 @@ def main():
     consts = estimate_constants(classifier_loss, p0,
                                 [ds.step() for ds in probe_ues],
                                 key=jax.random.PRNGKey(7), iters=3)
+    # Theta/sigma are estimated per UE; the solver wants one entry per DPU
+    # (N+S) — DC data is a mixture of offloaded UE data, so use UE means
+    consts = dataclasses.replace(
+        consts,
+        theta_i=np.concatenate([consts.theta_i,
+                                np.full(n_dc, consts.theta_i.mean())]),
+        sigma_i=np.concatenate([consts.sigma_i,
+                                np.full(n_dc, consts.sigma_i.mean())]))
     print(f"    L={consts.L:.2f} zeta1={consts.zeta1:.2f} "
           f"zeta2={consts.zeta2:.2f} Theta~{consts.theta_i.mean():.2f} "
           f"sigma~{consts.sigma_i.mean():.2f}")
@@ -55,22 +66,24 @@ def main():
         ues = make_online_ues(trx, tr_y, num_ue=n_ue,
                               mean_arrivals=arrivals,
                               std_arrivals=arrivals / 10)
-        hist = run_cefl(
-            net, ues, init_params=p0, loss_fn=classifier_loss,
+        engine = Engine(
+            net, strat, consts=consts, ow=ObjectiveWeights(T=args.rounds),
+            opts=EngineOptions(rounds=args.rounds, eta=0.1,
+                               solver_outer=3, reoptimize_every=3))
+        res = engine.run(
+            ues, init_params=p0, loss_fn=classifier_loss,
             eval_fn=lambda p: classifier_accuracy(
-                p, jnp.asarray(tex[:1000]), jnp.asarray(te_y[:1000])),
-            consts=consts, ow=ObjectiveWeights(T=args.rounds),
-            opts=CEFLOptions(rounds=args.rounds, strategy=strat, eta=0.1,
-                             solver_outer=3, reoptimize_every=3))
-        results[strat] = hist
-        print(f"    {strat:8s} acc {hist['acc'][-1]:.3f}  "
-              f"E {hist['cum_energy'][-1]:9.1f} J  "
-              f"delay {hist['cum_delay'][-1]:8.1f} s")
+                p, jnp.asarray(tex[:1000]), jnp.asarray(te_y[:1000])))
+        results[strat] = res
+        print(f"    {strat:8s} acc {res.final.acc:.3f}  "
+              f"loss {res.final.loss:.3f}  "
+              f"E {res.final.cum_energy:9.1f} J  "
+              f"delay {res.final.cum_delay:8.1f} s")
 
     print("[3/3] summary (CE-FL savings vs baselines at final round):")
     for base in ("fednova", "fedavg"):
-        e0 = results[base]["cum_energy"][-1]
-        e1 = results["cefl"]["cum_energy"][-1]
+        e0 = results[base].final.cum_energy
+        e1 = results["cefl"].final.cum_energy
         print(f"    energy vs {base}: {100 * (1 - e1 / e0):+.1f}%")
 
 

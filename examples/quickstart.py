@@ -2,7 +2,8 @@
 
 Builds a 6-UE / 3-BS / 2-DC network, streams non-iid online data to the UEs,
 lets the network-aware solver pick offloading + the floating aggregation DC
-each round, and trains the paper's image classifier cooperatively at UEs+DCs.
+each round, and trains the paper's image classifier cooperatively at UEs+DCs
+— all through the typed orchestration Engine (see docs/orchestration.md).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.cefl_paper import ClassifierConfig
-from repro.core import CEFLOptions, MLConstants, run_cefl
+from repro.core import Engine, EngineOptions, MLConstants
 from repro.data import make_image_dataset, make_online_ues
 from repro.models.classifier import (classifier_accuracy, classifier_loss,
                                      init_classifier_params)
@@ -29,21 +30,25 @@ def main():
     consts = MLConstants(L=5.0, theta_i=np.ones(8) * 2.0,
                          sigma_i=np.ones(8) * 3.0, zeta1=2.0, zeta2=1.0)
 
-    hist = run_cefl(
-        net, ues, init_params=p0, loss_fn=classifier_loss,
-        eval_fn=lambda p: classifier_accuracy(
-            p, jnp.asarray(tex[:500]), jnp.asarray(te_y[:500])),
-        consts=consts, ow=ObjectiveWeights(),
-        opts=CEFLOptions(rounds=8, strategy="cefl", eta=0.1,
-                         solver_outer=2, reoptimize_every=4))
+    engine = Engine(net, "cefl", consts=consts, ow=ObjectiveWeights(),
+                    opts=EngineOptions(rounds=8, eta=0.1, solver_outer=2,
+                                       reoptimize_every=4))
 
-    print("\nround  acc    aggregator  energy(J)  delay(s)")
-    for t in hist["round"]:
-        print(f"{t:5d}  {hist['acc'][t]:.3f}  DC{hist['aggregator'][t]:<9d} "
-              f"{hist['energy'][t]:9.2f} {hist['delay'][t]:9.2f}")
-    print(f"\nfinal accuracy {hist['acc'][-1]:.3f}; "
-          f"total energy {hist['cum_energy'][-1]:.1f} J, "
-          f"total delay {hist['cum_delay'][-1]:.1f} s")
+    print("\nround  acc    loss   aggregator  energy(J)  delay(s)")
+
+    @engine.on_round_end
+    def show(r):
+        print(f"{r.round:5d}  {r.acc:.3f}  {r.loss:.3f}  "
+              f"DC{r.aggregator:<9d} {r.energy:9.2f} {r.delay:9.2f}")
+
+    result = engine.run(ues, init_params=p0, loss_fn=classifier_loss,
+                        eval_fn=lambda p: classifier_accuracy(
+                            p, jnp.asarray(tex[:500]), jnp.asarray(te_y[:500])))
+
+    final = result.final
+    print(f"\nfinal accuracy {final.acc:.3f}; "
+          f"total energy {final.cum_energy:.1f} J, "
+          f"total delay {final.cum_delay:.1f} s")
 
 
 if __name__ == "__main__":

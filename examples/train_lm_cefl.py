@@ -1,12 +1,12 @@
-"""Train an LM with the mesh-native CE-FL round step (thin wrapper over the
-launcher).  With no flags this trains the reduced mamba2 smoke model; the
-full 130M run is the assignment's "~100M model for a few hundred steps":
+"""Train an LM with the mesh-native CE-FL round (thin wrapper over the
+launcher, which drives the engine's MeshExecutor round step).  With no
+flags this trains the reduced mamba2 smoke model; the full 130M run is the
+assignment's "~100M model for a few hundred steps":
 
   PYTHONPATH=src python examples/train_lm_cefl.py                  # smoke
   PYTHONPATH=src python examples/train_lm_cefl.py --full           # 130M
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

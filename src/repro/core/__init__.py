@@ -1,10 +1,18 @@
 # The paper's primary contribution: CE-FL — cooperative edge-assisted
 # dynamic federated learning with an optimized floating aggregation point.
 from repro.core import (  # noqa: F401
-    aggregation, cefl, convergence, drift, estimation, fedprox, round_step,
+    aggregation, api, cefl, convergence, drift, engine, estimation, fedprox,
+    round_step, strategies,
+)
+from repro.core.api import (  # noqa: F401
+    DecisionContext, DecisionStrategy, EngineOptions, RoundPlan, RoundReport,
+    RunResult, available_strategies, get_strategy, register_strategy,
 )
 from repro.core.cefl import CEFLOptions, run_cefl  # noqa: F401
 from repro.core.convergence import MLConstants  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    Engine, MeshExecutor, SimExecutor, realize_offloading,
+)
 from repro.core.round_step import (  # noqa: F401
     CEFLHyper, build_cefl_round_step, make_dpu_meta,
 )

@@ -1,212 +1,56 @@
-"""CE-FL end-to-end orchestration (simulation level, paper Secs. II+IV-VI):
+"""Deprecated dict-based CE-FL entry points, kept as thin shims.
 
-each global round t:
-  1. UEs observe new online data (concept drift),
-  2. the network-aware solver (SCA / greedy / fixed) picks the orchestration
-     w^t — offloading rho, compute settings f/z/gamma/m, aggregator I_s,
-  3. data offloading is realized (UE -> BS -> DC partitions),
-  4. every DPU runs FedProx local training (eqs. 5-10),
-  5. scaled accumulated gradients are BS-relayed and aggregated at the
-     floating aggregation DC (eq. 11),
-  6. delay / energy are charged per Sec. II-E.
+The orchestration loop now lives in the typed API:
 
-Baselines: FedNova and FedAvg (no offloading, fixed aggregator, homogeneous
-average settings), per Sec. VI-B1.
+  * :mod:`repro.core.api`        — RoundPlan / RoundReport / RunResult,
+                                   DecisionStrategy protocol + registry
+  * :mod:`repro.core.strategies` — the built-in strategies
+  * :mod:`repro.core.engine`     — Engine + Sim/Mesh executors
+
+``run_cefl`` still works (and now actually fills the ``loss`` series and
+warm-starts successive SCA solves), but new code should construct an
+:class:`~repro.core.engine.Engine` directly — see docs/orchestration.md.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List, Optional
+import warnings
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import aggregation, fedprox
+from repro.core.api import EngineOptions
+from repro.core.api import EngineOptions as CEFLOptions  # noqa: F401
+from repro.core.api import DecisionContext, RoundPlan, get_strategy
 from repro.core.convergence import MLConstants
-from repro.network.costs import network_costs, round_delay, round_energy
-from repro.solver import greedy as greedy_mod
+from repro.core.engine import Engine, SimExecutor
+from repro.core.engine import realize_offloading  # noqa: F401  (back-compat)
 from repro.solver.objective import ObjectiveWeights
-from repro.solver import sca
-from repro.solver.variables import round_indicators
 
 
-@dataclasses.dataclass
-class CEFLOptions:
-    rounds: int = 20
-    eta: float = 0.05
-    mu: float = 0.01
-    theta: Optional[float] = None   # None -> sum_i p_i gamma_i (tau_eff),
-                                    # the paper's "compensating" scaling
-    strategy: str = "cefl"    # cefl | greedy_data | greedy_rate | fixed:<s>
-    reoptimize_every: int = 1
-    solver_outer: int = 4
-    distributed_solver: bool = False   # centralized is faster for sims
-    gamma_default: int = 2
-    m_default: float = 0.5
-    rate_jitter: float = 0.15
-    seed: int = 0
-
-
-def realize_offloading(rng, data_per_ue: List[dict], w, net):
-    """Split each UE's round data per rho_nb / rho_bs into DPU datasets.
-    Returns (ue_datasets, dc_datasets) as lists of {'x','y'} dicts."""
-    N, B, S = net.dims
-    rho_nb = np.asarray(w["rho_nb"])
-    rho_bs = np.asarray(w["rho_bs"])
-    bs_pool_x, bs_pool_y = [[] for _ in range(B)], [[] for _ in range(B)]
-    ue_data = []
-    for n, d in enumerate(data_per_ue):
-        x, y = np.asarray(d["x"]), np.asarray(d["y"])
-        D = len(y)
-        perm = rng.permutation(D)
-        counts = np.floor(rho_nb[n] * D).astype(int)
-        start = 0
-        for b in range(B):
-            take = perm[start:start + counts[b]]
-            start += counts[b]
-            if len(take):
-                bs_pool_x[b].append(x[take])
-                bs_pool_y[b].append(y[take])
-        keep = perm[start:]
-        if len(keep) == 0:
-            keep = perm[:1]          # every UE keeps >=1 point
-        ue_data.append({"x": jnp.asarray(x[keep]), "y": jnp.asarray(y[keep])})
-    dc_x, dc_y = [[] for _ in range(S)], [[] for _ in range(S)]
-    for b in range(B):
-        if not bs_pool_x[b]:
-            continue
-        x = np.concatenate(bs_pool_x[b])
-        y = np.concatenate(bs_pool_y[b])
-        perm = rng.permutation(len(y))
-        counts = np.floor(rho_bs[b] * len(y)).astype(int)
-        # BSs keep no data: dump the rounding remainder on the best DC
-        counts[np.argmax(counts)] += len(y) - counts.sum()
-        start = 0
-        for s in range(S):
-            take = perm[start:start + counts[s]]
-            start += counts[s]
-            if len(take):
-                dc_x[s].append(x[take])
-                dc_y[s].append(y[take])
-    dc_data = []
-    for s in range(S):
-        if dc_x[s]:
-            dc_data.append({"x": jnp.asarray(np.concatenate(dc_x[s])),
-                            "y": jnp.asarray(np.concatenate(dc_y[s]))})
-        else:
-            dc_data.append(None)
-    return ue_data, dc_data
-
-
-def decide(strategy: str, net, D_bar, consts, ow, opts, w_prev=None):
-    if strategy == "cefl":
-        res = sca.solve(net, D_bar, consts, ow,
-                        max_outer=opts.solver_outer,
-                        distributed=opts.distributed_solver,
-                        w0=w_prev)
-        return res.w_rounded
-    base = greedy_mod.heuristic_base(net, D_bar)
-    base = dict(base)
-    base["gamma"] = jnp.full_like(base["gamma"], float(opts.gamma_default))
-    base["m"] = jnp.full_like(base["m"], opts.m_default)
-    if strategy == "greedy_data":
-        return greedy_mod.datapoint_greedy(net, D_bar, base)
-    if strategy == "greedy_rate":
-        return greedy_mod.rate_greedy(net, D_bar, base)
-    if strategy.startswith("fixed:"):
-        return greedy_mod.fixed_aggregator(net, D_bar,
-                                           int(strategy.split(":")[1]), base)
-    if strategy in ("fednova", "fedavg"):
-        # conventional FedL: no offloading, everything at the UEs,
-        # fixed aggregator 0, average settings
-        w = greedy_mod.fixed_aggregator(net, D_bar, 0, base)
-        w = dict(w)
-        w["rho_nb"] = jnp.zeros_like(w["rho_nb"])
-        c = network_costs(w, net, D_bar)
-        w["delta_A"], w["delta_R"] = c["delta_A_req"], c["delta_R_req"]
-        return w
-    raise ValueError(strategy)
+def decide(strategy: str, net, D_bar, consts, ow, opts, w_prev=None) -> Dict:
+    """Deprecated: resolve ``strategy`` through the registry and return the
+    decision as a plain dict (old call sites).  Use
+    ``api.get_strategy(name).decide(net, D_bar, ctx)`` instead."""
+    warnings.warn("core.cefl.decide is deprecated; use "
+                  "repro.core.api.get_strategy", DeprecationWarning,
+                  stacklevel=2)
+    prev = RoundPlan.from_w(w_prev) if isinstance(w_prev, dict) else w_prev
+    ctx = DecisionContext(round=0, consts=consts, ow=ow, opts=opts,
+                          prev_plan=prev)
+    return get_strategy(strategy).decide(net, D_bar, ctx).to_w()
 
 
 def run_cefl(net, online_datasets, *, init_params, loss_fn, eval_fn,
              consts: MLConstants, ow: ObjectiveWeights,
-             opts: CEFLOptions) -> Dict:
-    """Main loop.  online_datasets: list of core.drift.OnlineDataset (one
-    per UE).  loss_fn(params, batch)->scalar; eval_fn(params)->accuracy."""
-    rng = np.random.RandomState(opts.seed)
-    key = jax.random.PRNGKey(opts.seed)
-    N, B, S = net.dims
-    params = init_params
-    hist = {"round": [], "acc": [], "loss": [], "energy": [], "delay": [],
-            "aggregator": [], "cum_energy": [], "cum_delay": [],
-            "dc_points": [], "gamma_mean": [], "m_mean": []}
-    cum_E, cum_D = 0.0, 0.0
-    w = None
-    strategy = opts.strategy
-    is_baseline = strategy in ("fednova", "fedavg")
-    for t in range(opts.rounds):
-        data_per_ue = [ds.step() for ds in online_datasets]
-        D_bar = np.array([len(d["y"]) for d in data_per_ue], float)
-        net_t = net.resample_rates(rng, opts.rate_jitter)
-        if t % opts.reoptimize_every == 0 or w is None:
-            w = decide(strategy, net_t, D_bar, consts, ow, opts, w_prev=None)
-            w = round_indicators(w)
-        ue_data, dc_data = realize_offloading(rng, data_per_ue, w, net_t)
-        gammas = np.maximum(np.rint(np.asarray(w["gamma"])), 1).astype(int)
-        ms = np.clip(np.asarray(w["m"]), 0.05, 1.0)
-        results, weights, idxs = [], [], []
-        for i, d in enumerate(ue_data + dc_data):
-            if d is None or len(d["y"]) == 0:
-                continue
-            key, k = jax.random.split(key)
-            if strategy == "fedavg":
-                # FedAvg: plain local SGD (mu=0), aggregate local MODELS
-                r = fedprox.local_train(params, loss_fn, d,
-                                        gamma=int(gammas[i]),
-                                        m_frac=float(ms[i]),
-                                        eta=opts.eta, mu=0.0, key=k)
-            else:
-                r = fedprox.local_train(params, loss_fn, d,
-                                        gamma=int(gammas[i]),
-                                        m_frac=float(ms[i]),
-                                        eta=opts.eta,
-                                        mu=0.0 if is_baseline else opts.mu,
-                                        key=k)
-            results.append(r)
-            weights.append(r.num_examples)
-            idxs.append(i)
-        if strategy == "fedavg":
-            params = aggregation.fedavg_aggregate(
-                [r.params for r in results], weights)
-        elif strategy == "fednova":
-            params = aggregation.fednova_aggregate(
-                params, [r.d_i for r in results], weights,
-                [r.gamma for r in results], eta=opts.eta)
-        else:
-            wn = np.asarray(weights, float)
-            wn = wn / wn.sum()
-            theta = opts.theta if opts.theta is not None else float(
-                np.sum(wn * np.array([r.gamma for r in results])))
-            params = aggregation.aggregate(
-                params, [r.d_i for r in results], weights,
-                theta=theta, eta=opts.eta)
-        costs = network_costs(w, net_t, D_bar)
-        E = float(round_energy(costs, ow.xi3_sub))
-        Dl = float(round_delay(costs))
-        cum_E += E
-        cum_D += Dl
-        acc = float(eval_fn(params))
-        hist["round"].append(t)
-        hist["acc"].append(acc)
-        hist["energy"].append(E)
-        hist["delay"].append(Dl)
-        hist["cum_energy"].append(cum_E)
-        hist["cum_delay"].append(cum_D)
-        hist["aggregator"].append(int(np.argmax(np.asarray(w["I_s"]))))
-        hist["dc_points"].append([0 if d is None else len(d["y"])
-                                  for d in dc_data])
-        hist["gamma_mean"].append(float(gammas.mean()))
-        hist["m_mean"].append(float(ms.mean()))
-    return hist
+             opts: EngineOptions) -> Dict:
+    """Deprecated shim over :class:`~repro.core.engine.Engine`.
+
+    Returns the legacy history dict (``RunResult.to_history()``).
+    """
+    warnings.warn(
+        "run_cefl is deprecated; use repro.core.engine.Engine — "
+        "Engine(net, opts.strategy, consts=..., ow=..., opts=...)"
+        ".run(...).to_history() is equivalent", DeprecationWarning,
+        stacklevel=2)
+    engine = Engine(net, opts.strategy, consts=consts, ow=ow, opts=opts,
+                    executor=SimExecutor())
+    return engine.run(online_datasets, init_params=init_params,
+                      loss_fn=loss_fn, eval_fn=eval_fn).to_history()

@@ -1,0 +1,378 @@
+"""The CE-FL orchestration engine: one loop, two execution backends.
+
+Each global round t (paper Secs. II+IV-VI):
+  1. UEs observe new online data (concept drift),
+  2. the pluggable :class:`~repro.core.api.DecisionStrategy` picks the
+     orchestration plan w^t (offloading rho, compute settings f/z/gamma/m,
+     floating aggregator I_s) — warm-started from the previous plan,
+  3. data offloading is realized (UE -> BS -> DC partitions),
+  4. every DPU runs FedProx local training (eqs. 5-10) via the configured
+     executor,
+  5. scaled accumulated gradients are aggregated at the floating
+     aggregation DC (eq. 11) — or FedNova / FedAvg for the baselines,
+  6. delay / energy are charged per Sec. II-E and reported through
+     :class:`~repro.core.api.RoundReport` callbacks.
+
+Executors:
+  * :class:`SimExecutor` — the simulation path: per-DPU FedProx with
+    homogeneous-(gamma, m) DPUs batched through one vmapped proximal step
+    (``fedprox.local_train_batched``).
+  * :class:`MeshExecutor` — wraps the jitted SPMD round
+    (``core.round_step.build_cefl_round_step``), the same code path the
+    production launcher (``launch/train.py``) runs on real meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, fedprox
+from repro.core import strategies as _strategies  # noqa: F401  (registers)
+from repro.core.api import (DecisionContext, EngineOptions, RoundCallback,
+                            RoundPlan, RoundReport, RunResult, get_strategy,
+                            weighted_mean)
+from repro.core.round_step import CEFLHyper, build_cefl_round_step
+from repro.network.costs import network_costs, round_delay, round_energy
+
+
+# ------------------------------------------------------- offloading -----
+
+def realize_offloading(rng, data_per_ue: List[dict], w, net):
+    """Split each UE's round data per rho_nb / rho_bs into DPU datasets.
+
+    Returns (ue_datasets, dc_datasets) as lists of {'x','y'} dicts.  The
+    split conserves datapoints exactly: every input point lands at exactly
+    one DPU, even in the all-offload edge case (each UE always keeps at
+    least one point by clawing it back from its BS allocation) and the
+    degenerate case where every rho_bs share floors to zero (the whole BS
+    pool then goes to the DC with the largest rho share).
+    """
+    if isinstance(w, RoundPlan):
+        w = w.to_w()
+    N, B, S = net.dims
+    rho_nb = np.asarray(w["rho_nb"])
+    rho_bs = np.asarray(w["rho_bs"])
+    bs_pool_x, bs_pool_y = [[] for _ in range(B)], [[] for _ in range(B)]
+    ue_data = []
+    for n, d in enumerate(data_per_ue):
+        x, y = np.asarray(d["x"]), np.asarray(d["y"])
+        D = len(y)
+        if D == 0:
+            ue_data.append({"x": jnp.asarray(x), "y": jnp.asarray(y)})
+            continue
+        perm = rng.permutation(D)
+        counts = np.floor(rho_nb[n] * D).astype(int)
+        # all-offload guard: every UE keeps >= 1 point, taken back from
+        # its largest BS allocation (rather than duplicating a point)
+        excess = counts.sum() - (D - 1)
+        while excess > 0:
+            j = int(np.argmax(counts))
+            take = min(excess, counts[j])
+            counts[j] -= take
+            excess -= take
+        start = 0
+        for b in range(B):
+            take = perm[start:start + counts[b]]
+            start += counts[b]
+            if len(take):
+                bs_pool_x[b].append(x[take])
+                bs_pool_y[b].append(y[take])
+        keep = perm[start:]
+        ue_data.append({"x": jnp.asarray(x[keep]), "y": jnp.asarray(y[keep])})
+    dc_x, dc_y = [[] for _ in range(S)], [[] for _ in range(S)]
+    for b in range(B):
+        if not bs_pool_x[b]:
+            continue
+        x = np.concatenate(bs_pool_x[b])
+        y = np.concatenate(bs_pool_y[b])
+        perm = rng.permutation(len(y))
+        counts = np.floor(rho_bs[b] * len(y)).astype(int)
+        # BSs keep no data: the rounding remainder goes to the DC with the
+        # largest rho share (covers the all-floored-to-zero pool case);
+        # shave from the largest counts if a row ever over-allocates.
+        rem = len(y) - counts.sum()
+        while rem < 0:
+            j = int(np.argmax(counts))
+            give = min(-rem, counts[j])
+            counts[j] -= give
+            rem += give
+        counts[int(np.argmax(rho_bs[b]))] += rem
+        start = 0
+        for s in range(S):
+            take = perm[start:start + counts[s]]
+            start += counts[s]
+            if len(take):
+                dc_x[s].append(x[take])
+                dc_y[s].append(y[take])
+    dc_data = []
+    for s in range(S):
+        if dc_x[s]:
+            dc_data.append({"x": jnp.asarray(np.concatenate(dc_x[s])),
+                            "y": jnp.asarray(np.concatenate(dc_y[s]))})
+        else:
+            dc_data.append(None)
+    return ue_data, dc_data
+
+
+# -------------------------------------------------------- executors -----
+
+def _plan_settings(plan: RoundPlan):
+    gammas = np.maximum(np.rint(np.asarray(plan.gamma)), 1).astype(int)
+    ms = np.clip(np.asarray(plan.m), 0.05, 1.0)
+    return gammas, ms
+
+
+def _aggregate(params, results, agg: str, *, eta: float,
+               theta: Optional[float]):
+    weights = [r.num_examples for r in results]
+    if agg == "fedavg":
+        return aggregation.fedavg_aggregate(
+            [r.params for r in results], weights)
+    if agg == "fednova":
+        return aggregation.fednova_aggregate(
+            params, [r.d_i for r in results], weights,
+            [r.gamma for r in results], eta=eta)
+    wn = np.asarray(weights, float)
+    wn = wn / wn.sum()
+    theta_val = theta if theta is not None else float(
+        np.sum(wn * np.array([r.gamma for r in results])))   # tau_eff
+    return aggregation.aggregate(params, [r.d_i for r in results], weights,
+                                 theta=theta_val, eta=eta)
+
+
+@dataclasses.dataclass
+class SimExecutor:
+    """Simulation backend: per-DPU FedProx on each DPU's own dataset.
+
+    With ``batch_homogeneous`` (default), DPUs sharing (gamma, m,
+    mini-batch bucket) train through one vmapped proximal step per local
+    iteration — numerically identical to the sequential path (per-DPU PRNG
+    streams are preserved), but with G-DPU groups costing one dispatch
+    instead of G.
+    """
+    batch_homogeneous: bool = True
+
+    def run_round(self, params, plan: RoundPlan, datasets, *, loss_fn,
+                  eta: float, mu: float, theta: Optional[float], agg: str,
+                  key):
+        gammas, ms = _plan_settings(plan)
+        live = [(i, d) for i, d in enumerate(datasets)
+                if d is not None and len(d["y"])]
+        if not live:
+            return params, float("nan")
+        keys = jax.random.split(key, len(live))
+        results = [None] * len(live)
+        if self.batch_homogeneous:
+            groups: Dict[tuple, list] = {}
+            for j, (i, d) in enumerate(live):
+                D = len(d["y"])
+                bucket = fedprox._bucket(max(1, int(round(ms[i] * D))))
+                groups.setdefault(
+                    (int(gammas[i]), float(ms[i]), bucket), []).append(j)
+            for (gamma, m, _bucket), idxs in groups.items():
+                out = fedprox.local_train_batched(
+                    params, loss_fn, [live[j][1] for j in idxs],
+                    gamma=gamma, m_frac=m, eta=eta, mu=mu,
+                    keys=[keys[j] for j in idxs])
+                for j, r in zip(idxs, out):
+                    results[j] = r
+        else:
+            for j, (i, d) in enumerate(live):
+                results[j] = fedprox.local_train(
+                    params, loss_fn, d, gamma=int(gammas[i]),
+                    m_frac=float(ms[i]), eta=eta, mu=mu, key=keys[j])
+        new_params = _aggregate(params, results, agg, eta=eta, theta=theta)
+        mean_loss = weighted_mean([r.loss for r in results],
+                                  [r.num_examples for r in results])
+        return new_params, mean_loss
+
+
+@dataclasses.dataclass
+class MeshExecutor:
+    """Mesh backend: the paper loop through the jitted SPMD round step.
+
+    Active DPUs are packed on a leading DPU axis (datasets right-padded to
+    a shared power-of-two batch, the CE-FL mini-batch ratio applied as a
+    leading-example mask), so one ``round_step`` call trains and
+    aggregates every DPU — the same code the production launcher runs on
+    TPU meshes.  Differences vs :class:`SimExecutor`: mini-batches are the
+    deterministic leading slice rather than random draws (identical when
+    m=1), the reported loss is the unweighted DPU mean of the final local
+    iteration (not the weighted all-step mean), and FedAvg
+    model-averaging has no SPMD equivalent here.
+
+    The jitted step is cached per (loss_fn, gamma_max, DPU count, batch
+    bucket, mu); theta is applied outside the jit so per-round tau_eff
+    changes never recompile.
+    """
+    agg_schedule: str = "all_reduce"
+    _cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def build_step(self, micro_loss_fn, hyper: CEFLHyper, *, jit=True):
+        """The jitted SPMD round step for a mesh-layout ``micro_loss_fn``
+        (params, microbatch, mask) -> (loss, aux).  Used directly by the
+        LM launcher; ``run_round`` goes through the same cache."""
+        step = build_cefl_round_step(micro_loss_fn, hyper)
+        return jax.jit(step, donate_argnums=(0,)) if jit else step
+
+    def _get_step(self, loss_fn, n_dpu, bucket, gamma_max, mu, eta):
+        cache_key = (id(loss_fn), n_dpu, bucket, gamma_max, mu, eta)
+        if cache_key not in self._cache:
+            def micro_loss(p, micro, mask):
+                return loss_fn(p, micro, mask), {}
+            hyper = CEFLHyper(eta=eta, mu=mu, theta=1.0,
+                              gamma_max=gamma_max, n_micro=1,
+                              agg_schedule=self.agg_schedule)
+            # no donation here: run_round still needs the undonated params
+            self._cache[cache_key] = jax.jit(
+                build_cefl_round_step(micro_loss, hyper))
+        return self._cache[cache_key]
+
+    def run_round(self, params, plan: RoundPlan, datasets, *, loss_fn,
+                  eta: float, mu: float, theta: Optional[float], agg: str,
+                  key):
+        del key  # deterministic leading-slice mini-batches
+        if agg == "fedavg":
+            raise NotImplementedError(
+                "MeshExecutor aggregates accumulated gradients (eq. 11); "
+                "FedAvg model averaging needs SimExecutor")
+        gammas, ms = _plan_settings(plan)
+        live = [(i, d) for i, d in enumerate(datasets)
+                if d is not None and len(d["y"])]
+        if not live:
+            return params, float("nan")
+        Ds = [len(d["y"]) for _, d in live]
+        bucket = fedprox._bucket(max(Ds))
+        n = len(live)
+        padded = []
+        for (i, d), D in zip(live, Ds):
+            padded.append(jax.tree_util.tree_map(
+                lambda x: jnp.pad(
+                    x, [(0, bucket - D)] + [(0, 0)] * (x.ndim - 1)), d))
+        # (n_dpu, n_micro=1, mb, ...) mesh batch layout
+        batch = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs)[:, None], *padded)
+        live_gammas = np.array([gammas[i] for i, _ in live])
+        gamma_max = int(live_gammas.max())
+        # real examples sit first, so folding the pad into the mini-batch
+        # ratio makes the leading-example mask select ceil(m_i * D_i) of
+        # them and none of the padding
+        m_eff = np.array([ms[i] * D / bucket for (i, _), D in zip(live, Ds)])
+        w = np.asarray(Ds, float)
+        w = w / w.sum()
+        if agg == "fednova" or theta is None:
+            theta_val = float(np.sum(w * live_gammas))      # tau_eff
+        else:
+            theta_val = float(theta)
+        meta = {"gamma": jnp.asarray(live_gammas, jnp.int32),
+                "m_frac": jnp.asarray(m_eff, jnp.float32),
+                "weight": jnp.asarray(w, jnp.float32)}
+        step = self._get_step(loss_fn, n, bucket, gamma_max, mu, eta)
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params)
+        new_stack, metrics = step(stacked, batch, meta)
+        # the step ran with theta=1; rescale the global update outside the
+        # jit so per-round tau_eff never triggers recompilation
+        new_params = jax.tree_util.tree_map(
+            lambda p, p1: p + theta_val * (p1[0] - p), params, new_stack)
+        return new_params, float(metrics["loss"])
+
+
+# ----------------------------------------------------------- engine -----
+
+class Engine:
+    """Drives the CE-FL loop with a pluggable strategy and executor.
+
+    >>> engine = Engine(net, "cefl", consts=consts, ow=ow,
+    ...                 opts=EngineOptions(rounds=8))
+    >>> result = engine.run(online_ues, init_params=p0,
+    ...                     loss_fn=loss_fn, eval_fn=eval_fn)
+    >>> result.final.acc, result.to_history()["loss"]
+    """
+
+    def __init__(self, net, strategy=None, *, consts, ow,
+                 opts: Optional[EngineOptions] = None,
+                 executor=None,
+                 callbacks: Sequence[RoundCallback] = (),
+                 validate_plans: bool = True):
+        self.net = net
+        self.opts = opts or EngineOptions()
+        self.strategy = get_strategy(
+            strategy if strategy is not None else self.opts.strategy)
+        self.executor = executor if executor is not None else SimExecutor()
+        self.callbacks: List[RoundCallback] = list(callbacks)
+        self.validate_plans = validate_plans
+        self.consts = consts
+        self.ow = ow
+
+    def on_round_end(self, callback: RoundCallback) -> RoundCallback:
+        """Register a callback (usable as a decorator).  Returning True
+        from a callback stops the run after the current round."""
+        self.callbacks.append(callback)
+        return callback
+
+    def decide(self, net_t, D_bar, t: int,
+               prev_plan: Optional[RoundPlan]) -> RoundPlan:
+        ctx = DecisionContext(round=t, consts=self.consts, ow=self.ow,
+                              opts=self.opts, prev_plan=prev_plan)
+        plan = self.strategy.decide(net_t, D_bar, ctx)
+        if self.validate_plans:
+            plan.validate(net_t)
+        return plan
+
+    def run(self, online_datasets, *, init_params, loss_fn,
+            eval_fn) -> RunResult:
+        """Run the full orchestration loop.
+
+        ``online_datasets``: one ``core.drift.OnlineDataset`` per UE.
+        ``loss_fn(params, batch, example_weights) -> scalar``;
+        ``eval_fn(params) -> accuracy``.
+        """
+        opts = self.opts
+        rng = np.random.RandomState(opts.seed)
+        key = jax.random.PRNGKey(opts.seed)
+        params = init_params
+        agg = getattr(self.strategy, "aggregation", "cefl")
+        mu = opts.mu if getattr(self.strategy, "proximal", True) else 0.0
+        reports: List[RoundReport] = []
+        cum_E = cum_D = 0.0
+        plan: Optional[RoundPlan] = None
+        for t in range(opts.rounds):
+            t0 = time.time()
+            data_per_ue = [ds.step() for ds in online_datasets]
+            D_bar = np.array([len(d["y"]) for d in data_per_ue], float)
+            net_t = self.net.resample_rates(rng, opts.rate_jitter)
+            if plan is None or t % opts.reoptimize_every == 0:
+                plan = self.decide(net_t, D_bar, t, prev_plan=plan)
+            ue_data, dc_data = realize_offloading(rng, data_per_ue, plan,
+                                                  net_t)
+            key, sub = jax.random.split(key)
+            params, mean_loss = self.executor.run_round(
+                params, plan, ue_data + dc_data, loss_fn=loss_fn,
+                eta=opts.eta, mu=mu, theta=opts.theta, agg=agg, key=sub)
+            costs = network_costs(plan.to_w(), net_t, D_bar)
+            E = float(round_energy(costs, self.ow.xi3_sub))
+            Dl = float(round_delay(costs))
+            cum_E += E
+            cum_D += Dl
+            gammas, ms = _plan_settings(plan)
+            report = RoundReport(
+                round=t, acc=float(eval_fn(params)), loss=mean_loss,
+                energy=E, delay=Dl, cum_energy=cum_E, cum_delay=cum_D,
+                aggregator=plan.aggregator,
+                dc_points=tuple(0 if d is None else len(d["y"])
+                                for d in dc_data),
+                gamma_mean=float(gammas.mean()), m_mean=float(ms.mean()),
+                plan=plan, wall_time=time.time() - t0)
+            reports.append(report)
+            stop = False
+            for cb in self.callbacks:
+                stop = (cb(report) is True) or stop
+            if stop:
+                break
+        return RunResult(reports=reports, params=params)

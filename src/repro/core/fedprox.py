@@ -13,6 +13,7 @@ dataset); the mesh-native vectorized round lives in repro.core.round_step.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Tuple
 
 import jax
@@ -38,6 +39,7 @@ class LocalResult:
     num_examples: int     # D_i^{(t)}
     gamma: int
     sgd_flops: float      # processed examples * gamma (for cost models)
+    loss: float = float("nan")   # mean mini-batch loss over the gamma steps
 
 
 def sample_minibatch(key, num_examples: int, m_frac: float):
@@ -58,15 +60,19 @@ def _bucket(n: int) -> int:
 _STEP_CACHE = {}
 
 
+def _prox_step(loss_fn, params, anchor, batch, weights, eta, mu):
+    """One proximal SGD step on g_i(x, x^t) (eq. 6) — the single source of
+    truth for both the sequential and the vmapped batched paths."""
+    loss, gF = jax.value_and_grad(loss_fn)(params, batch, weights)
+    new = jax.tree_util.tree_map(
+        lambda p, g, x0: p - eta * (g + mu * (p - x0)),
+        params, gF, anchor)
+    return new, gF, loss
+
+
 def _prox_step_fn(loss_fn):
     if loss_fn not in _STEP_CACHE:
-        def step(params, anchor, batch, weights, eta, mu):
-            loss, gF = jax.value_and_grad(loss_fn)(params, batch, weights)
-            new = jax.tree_util.tree_map(
-                lambda p, g, x0: p - eta * (g + mu * (p - x0)),
-                params, gF, anchor)
-            return new, gF, loss
-        _STEP_CACHE[loss_fn] = jax.jit(step)
+        _STEP_CACHE[loss_fn] = jax.jit(functools.partial(_prox_step, loss_fn))
     return _STEP_CACHE[loss_fn]
 
 
@@ -88,6 +94,7 @@ def local_train(params, loss_fn: Callable, data: dict, *, gamma: int,
     keys = jax.random.split(key, gamma)
     eta_j = jnp.asarray(eta, jnp.float32)
     mu_j = jnp.asarray(mu, jnp.float32)
+    loss_sum = 0.0
     for k in range(gamma):
         idx = np.asarray(sample_minibatch(keys[k], D, m_frac))
         bsz = _bucket(len(idx))
@@ -96,12 +103,81 @@ def local_train(params, loss_fn: Callable, data: dict, *, gamma: int,
             np.concatenate([np.ones(len(idx)), np.zeros(bsz - len(idx))]),
             jnp.float32)
         batch = jax.tree_util.tree_map(lambda x: x[pad], data)
-        params, gF, _ = step(params, anchor, batch, weights, eta_j, mu_j)
+        params, gF, loss = step(params, anchor, batch, weights, eta_j, mu_j)
+        loss_sum += float(loss)
         acc = jax.tree_util.tree_map(
             lambda acU, g: acU + a[k] * g, acc, gF)       # eq. (10) numerator
     d_i = jax.tree_util.tree_map(lambda x: x / a1, acc)
     return LocalResult(params=params, d_i=d_i, num_examples=D, gamma=gamma,
-                       sgd_flops=float(gamma) * m_frac * D)
+                       sgd_flops=float(gamma) * m_frac * D,
+                       loss=loss_sum / gamma)
+
+
+_BATCH_STEP_CACHE = {}
+
+
+def _prox_step_batched_fn(loss_fn):
+    """`_prox_step` for a stack of DPUs (leading group axis on
+    params/batch/weights; the anchor x^t is shared)."""
+    if loss_fn not in _BATCH_STEP_CACHE:
+        step = jax.vmap(functools.partial(_prox_step, loss_fn),
+                        in_axes=(0, None, 0, 0, None, None))
+        _BATCH_STEP_CACHE[loss_fn] = jax.jit(step)
+    return _BATCH_STEP_CACHE[loss_fn]
+
+
+def local_train_batched(params, loss_fn: Callable, datasets, *, gamma: int,
+                        m_frac: float, eta: float, mu: float, keys):
+    """``local_train`` for a homogeneous-(gamma, m) group of DPUs, all
+    starting from the same global ``params``, through ONE vmapped proximal
+    step per local iteration instead of one jitted call per DPU.
+
+    ``datasets``: list of per-DPU data dicts (sizes may differ — every
+    DPU's mini-batch must land in the same power-of-two bucket, which the
+    caller guarantees by grouping).  ``keys``: one PRNG key per DPU; each
+    is split into gamma step keys exactly like the sequential path, so the
+    per-DPU mini-batch draws match ``local_train`` bit-for-bit.
+    """
+    G = len(datasets)
+    anchor = params
+    Ds = [jax.tree_util.tree_leaves(d)[0].shape[0] for d in datasets]
+    bszs = [max(1, int(round(m_frac * D))) for D in Ds]
+    bucket = _bucket(max(bszs))
+    assert all(_bucket(b) == bucket for b in bszs), \
+        "grouping must put same-bucket DPUs together"
+    a = a_coefficients(gamma, eta, mu)
+    a1 = float(jnp.sum(a))
+    step = _prox_step_batched_fn(loss_fn)
+    p_stack = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), params)
+    acc = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((G,) + x.shape, x.dtype), params)
+    step_keys = [jax.random.split(k, gamma) for k in keys]
+    eta_j = jnp.asarray(eta, jnp.float32)
+    mu_j = jnp.asarray(mu, jnp.float32)
+    loss_sum = np.zeros(G)
+    for k in range(gamma):
+        micro, wts = [], []
+        for j, d in enumerate(datasets):
+            idx = np.asarray(sample_minibatch(step_keys[j][k], Ds[j], m_frac))
+            pad = np.concatenate([idx, np.zeros(bucket - len(idx), idx.dtype)])
+            wts.append(np.concatenate([np.ones(len(idx)),
+                                       np.zeros(bucket - len(idx))]))
+            micro.append(jax.tree_util.tree_map(lambda x: x[pad], d))
+        batch = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *micro)
+        weights = jnp.asarray(np.stack(wts), jnp.float32)
+        p_stack, gF, losses = step(p_stack, anchor, batch, weights,
+                                   eta_j, mu_j)
+        loss_sum += np.asarray(losses)
+        acc = jax.tree_util.tree_map(
+            lambda acU, g: acU + a[k] * g, acc, gF)
+    d_stack = jax.tree_util.tree_map(lambda x: x / a1, acc)
+    return [LocalResult(
+        params=jax.tree_util.tree_map(lambda x: x[j], p_stack),
+        d_i=jax.tree_util.tree_map(lambda x: x[j], d_stack),
+        num_examples=Ds[j], gamma=gamma,
+        sgd_flops=float(gamma) * m_frac * Ds[j],
+        loss=float(loss_sum[j] / gamma)) for j in range(G)]
 
 
 def verify_accumulation_identity(params0, result: LocalResult, *, eta, mu):

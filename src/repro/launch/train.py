@@ -1,8 +1,9 @@
 """CE-FL LM training launcher (real execution on local devices).
 
-Runs the mesh-native CE-FL round step on an actual (small) mesh — the CPU
-path that examples and tests use; on a TPU slice the identical code runs on
-``make_production_mesh()``.
+Runs the mesh-native CE-FL round step — built through the orchestration
+engine's :class:`~repro.core.engine.MeshExecutor` — on an actual (small)
+mesh: the CPU path that examples and tests use; on a TPU slice the
+identical code runs on ``make_production_mesh()``.
 
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
       --steps 20 --batch 8 --seq 256 [--reduced] [--gamma 2]
@@ -17,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core.round_step import CEFLHyper, build_cefl_round_step, \
-    make_dpu_meta
+from repro.core.engine import MeshExecutor
+from repro.core.round_step import CEFLHyper, make_dpu_meta
 from repro.data import make_token_batches
 from repro.models import lm as L
 from repro.training.checkpoint import save_checkpoint
@@ -59,8 +60,7 @@ def main(argv=None):
     hyper = CEFLHyper(eta=args.eta, mu=args.mu,
                       theta=float(args.gamma),   # tau_eff compensation
                       gamma_max=args.gamma, n_micro=args.n_micro)
-    step = jax.jit(build_cefl_round_step(loss_fn, hyper),
-                   donate_argnums=(0,))
+    step = MeshExecutor().build_step(loss_fn, hyper)   # jitted, donating
     meta = make_dpu_meta(args.n_dpu,
                          gammas=[args.gamma] * args.n_dpu)
 

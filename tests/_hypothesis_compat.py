@@ -1,0 +1,63 @@
+"""Use `hypothesis` when installed; otherwise a tiny deterministic stand-in.
+
+The container the tier-1 suite runs in has no network access and no
+``hypothesis`` wheel baked in, which used to fail collection for five test
+modules.  The fallback here implements just the strategy surface those
+modules use (floats / integers / sampled_from / lists) and runs each
+``@given`` test on a handful of seeded pseudo-random draws — strictly
+weaker than hypothesis, but it keeps the properties exercised.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    import numpy as np
+
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw            # draw(rng) -> value
+
+    class st:  # noqa: N801  (mimics the hypothesis.strategies namespace)
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def integers(min_value=0, max_value=100, **_):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randint(len(seq))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, **_):
+            def draw(rng):
+                n = int(rng.randint(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*garg, **gkw):
+        def deco(fn):
+            # no functools.wraps: pytest must NOT see fn's parameters
+            # (it would treat the strategy-filled ones as fixtures)
+            def wrapper():
+                for case in range(_FALLBACK_EXAMPLES):
+                    rng = np.random.RandomState(20260728 + case)
+                    vals = [s.draw(rng) for s in garg]
+                    kv = {k: s.draw(rng) for k, s in gkw.items()}
+                    fn(*vals, **kv)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,0 +1,272 @@
+"""Typed orchestration API (core/api.py + core/engine.py): strategy
+registry, RoundPlan validation, executor parity, history back-compat, and
+the realize_offloading conservation guarantees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cefl_paper import ClassifierConfig
+from repro.core import (CEFLOptions, Engine, EngineOptions, MeshExecutor,
+                        MLConstants, RoundPlan, SimExecutor,
+                        available_strategies, get_strategy,
+                        realize_offloading, register_strategy, run_cefl)
+from repro.core import strategies as S
+from repro.data import make_image_dataset, make_online_ues
+from repro.models.classifier import (classifier_accuracy, classifier_loss,
+                                     init_classifier_params)
+from repro.network import NetworkConfig, make_network
+from repro.solver import ObjectiveWeights
+from repro.solver.greedy import fixed_aggregator
+from repro.solver.variables import round_indicators
+
+NET = make_network(NetworkConfig(num_ue=4, num_bs=2, num_dc=2))
+(TRX, TRY), (TEX, TEY) = make_image_dataset(2000, (8, 8, 1))
+CCFG = ClassifierConfig(input_shape=(8, 8, 1), hidden=(16,))
+P0 = init_classifier_params(jax.random.PRNGKey(0), CCFG)
+CONSTS = MLConstants(L=5.0, theta_i=np.ones(6) * 2, sigma_i=np.ones(6) * 3,
+                     zeta1=2.0, zeta2=1.0)
+OW = ObjectiveWeights()
+D_BAR = np.full(4, 500.0)
+
+
+def _eval(p):
+    return classifier_accuracy(p, jnp.asarray(TEX[:200]),
+                               jnp.asarray(TEY[:200]))
+
+
+def _engine(strategy, executor=None, **opt_kw):
+    opts = EngineOptions(rounds=opt_kw.pop("rounds", 3), eta=0.1,
+                         solver_outer=2, **opt_kw)
+    return Engine(NET, strategy, consts=CONSTS, ow=OW, opts=opts,
+                  executor=executor)
+
+
+def _run(engine, seed=0):
+    ues = make_online_ues(TRX, TRY, num_ue=4, mean_arrivals=150,
+                          std_arrivals=15, seed=seed)
+    return engine.run(ues, init_params=P0, loss_fn=classifier_loss,
+                      eval_fn=_eval)
+
+
+def _fixed_plan(s=0):
+    w = fixed_aggregator(NET, D_BAR, s)
+    return RoundPlan.from_w(round_indicators(w))
+
+
+# ------------------------------------------------------- registry -----
+
+def test_registry_roundtrip():
+    assert {"cefl", "greedy_data", "greedy_rate", "fixed", "fednova",
+            "fedavg"} <= set(available_strategies())
+
+    @register_strategy("_test_dummy")
+    class Dummy:
+        def decide(self, net, D_bar, ctx):
+            return _fixed_plan(0)
+
+    try:
+        assert isinstance(get_strategy("_test_dummy"), Dummy)
+        # duplicate registration is rejected
+        with pytest.raises(ValueError, match="already registered"):
+            register_strategy("_test_dummy")(Dummy)
+    finally:
+        from repro.core.api import _STRATEGY_REGISTRY
+        _STRATEGY_REGISTRY.pop("_test_dummy")
+
+
+def test_registry_unknown_name_and_args():
+    with pytest.raises(KeyError, match="unknown strategy 'nope'"):
+        get_strategy("nope")
+    assert get_strategy("fixed:1").s_idx == 1
+    with pytest.raises(ValueError, match="fixed:<s>"):
+        get_strategy("fixed")
+    # instances pass through untouched
+    strat = get_strategy("cefl")
+    assert get_strategy(strat) is strat
+
+
+# ------------------------------------------------------ RoundPlan -----
+
+def test_roundplan_roundtrip_and_validate():
+    plan = _fixed_plan(1)
+    plan.validate(NET)
+    assert plan.aggregator == 1
+    w = plan.to_w()
+    assert RoundPlan.from_w(w).to_w().keys() == w.keys()
+    with pytest.raises(KeyError, match="missing keys"):
+        RoundPlan.from_w({"rho_nb": w["rho_nb"]})
+
+
+def test_roundplan_validation_rejects_bad_simplex_and_indicators():
+    plan = _fixed_plan(0)
+    bad = plan.replace(rho_bs=jnp.asarray(plan.rho_bs) * 3.0)
+    with pytest.raises(ValueError, match="rho_bs"):
+        bad.validate(NET)
+    bad = plan.replace(I_s=jnp.full_like(jnp.asarray(plan.I_s), 0.5))
+    with pytest.raises(ValueError, match="I_s"):
+        bad.validate(NET)
+    bad = plan.replace(rho_nb=jnp.ones_like(jnp.asarray(plan.rho_nb)))
+    with pytest.raises(ValueError, match="rho_nb"):
+        bad.validate(NET)
+    bad = plan.replace(m=jnp.zeros_like(jnp.asarray(plan.m)))
+    with pytest.raises(ValueError, match="m must"):
+        bad.validate(NET)
+
+
+# -------------------------------------------------- engine + parity -----
+
+def test_sim_vs_mesh_executor_parity():
+    """Same seed, strategy fixed:0, full mini-batches -> both executors
+    must produce the same trajectory (the mesh step is the same math with
+    deterministic full batches)."""
+    kw = dict(m_default=1.0, gamma_default=2, rounds=3)
+    res_sim = _run(_engine("fixed:0", SimExecutor(), **kw))
+    res_mesh = _run(_engine("fixed:0", MeshExecutor(), **kw))
+    np.testing.assert_allclose(res_sim.series("acc"),
+                               res_mesh.series("acc"), atol=0.02)
+    for a, b in zip(jax.tree_util.tree_leaves(res_sim.params),
+                    jax.tree_util.tree_leaves(res_mesh.params)):
+        np.testing.assert_allclose(a, b, atol=1e-3)
+    # identical decisions -> identical accounting
+    np.testing.assert_allclose(res_sim.series("energy"),
+                               res_mesh.series("energy"), rtol=1e-6)
+    assert res_sim.series("aggregator") == res_mesh.series("aggregator")
+
+
+def test_sim_batched_matches_sequential():
+    """Vmapped homogeneous-(gamma, m) batching preserves the per-DPU
+    trajectories of the sequential path."""
+    res_b = _run(_engine("fixed:0", SimExecutor(batch_homogeneous=True)))
+    res_s = _run(_engine("fixed:0", SimExecutor(batch_homogeneous=False)))
+    for a, b in zip(jax.tree_util.tree_leaves(res_b.params),
+                    jax.tree_util.tree_leaves(res_s.params)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_engine_reports_and_loss_series():
+    res = _run(_engine("greedy_data"))
+    assert len(res) == 3
+    assert all(np.isfinite(r.loss) for r in res.reports)
+    assert res.reports[0].loss > res.reports[-1].loss - 0.5  # training signal
+    assert all(r.plan is not None for r in res.reports)
+    assert res.final is res.reports[-1]
+
+
+def test_to_history_backcompat_schema():
+    res = _run(_engine("fixed:1"))
+    h = res.to_history()
+    legacy_keys = {"round", "acc", "loss", "energy", "delay", "aggregator",
+                   "cum_energy", "cum_delay", "dc_points", "gamma_mean",
+                   "m_mean"}
+    assert set(h.keys()) == legacy_keys
+    assert all(len(v) == len(res) for v in h.values())
+    assert h["loss"] and np.isfinite(h["loss"]).all()   # satellite: filled
+    assert h["aggregator"] == [1, 1, 1]
+    assert isinstance(h["dc_points"][0], list)
+
+
+def test_run_cefl_shim_warns_and_matches_engine():
+    ues = make_online_ues(TRX, TRY, num_ue=4, mean_arrivals=150,
+                          std_arrivals=15, seed=0)
+    with pytest.warns(DeprecationWarning, match="run_cefl is deprecated"):
+        h = run_cefl(NET, ues, init_params=P0, loss_fn=classifier_loss,
+                     eval_fn=_eval, consts=CONSTS, ow=OW,
+                     opts=CEFLOptions(rounds=2, strategy="fixed:0", eta=0.1,
+                                      solver_outer=2))
+    h2 = _run(_engine("fixed:0", rounds=2)).to_history()
+    np.testing.assert_allclose(h["acc"], h2["acc"], atol=1e-6)
+    np.testing.assert_allclose(h["loss"], h2["loss"], atol=1e-6)
+
+
+def test_warm_start_threads_previous_plan(monkeypatch):
+    seen = []
+    orig = S.sca.solve
+
+    def spy(net, D_bar, consts, ow, **kw):
+        seen.append(kw.get("w0"))
+        return orig(net, D_bar, consts, ow, **kw)
+
+    monkeypatch.setattr(S.sca, "solve", spy)
+    _run(_engine("cefl", rounds=2, reoptimize_every=1))
+    assert len(seen) == 2
+    assert seen[0] is None and seen[1] is not None
+    assert set(seen[1]) == set(RoundPlan.from_w(seen[1]).to_w())
+
+
+def test_callback_early_stop_and_decorator():
+    eng = _engine("fixed:0", rounds=5)
+    rounds_seen = []
+
+    @eng.on_round_end
+    def stop_after_two(report):
+        rounds_seen.append(report.round)
+        return report.round >= 1
+
+    res = _run(eng)
+    assert rounds_seen == [0, 1] and len(res) == 2
+
+
+def test_mesh_executor_rejects_fedavg():
+    with pytest.raises(NotImplementedError, match="FedAvg"):
+        _run(_engine("fedavg", MeshExecutor(), rounds=1))
+
+
+# --------------------------------------- offloading conservation -----
+
+def _ue_batches(rng, sizes):
+    return [{"x": rng.randn(D, 4).astype(np.float32),
+             "y": rng.randint(0, 10, D)} for D in sizes]
+
+
+def _total_points(ue_data, dc_data):
+    return sum(len(d["y"]) for d in ue_data) + \
+        sum(0 if d is None else len(d["y"]) for d in dc_data)
+
+
+def test_realize_offloading_conserves_points_all_offload():
+    """Every datapoint lands at exactly one DPU, even when rho_nb rows sum
+    to 1 (all-offload) — the old path duplicated a point per UE."""
+    rng = np.random.RandomState(0)
+    N, B, S = NET.dims
+    sizes = [97, 64, 31, 128]
+    data = _ue_batches(rng, sizes)
+    plan = _fixed_plan(0)
+    w = plan.to_w()
+    w["rho_nb"] = jnp.ones((N, B)) / B          # rows sum to exactly 1
+    ue_data, dc_data = realize_offloading(rng, data, w, NET)
+    assert _total_points(ue_data, dc_data) == sum(sizes)
+    assert all(len(d["y"]) >= 1 for d in ue_data)   # every UE keeps a point
+
+
+def test_realize_offloading_conserves_points_floored_rho_bs():
+    """BS pools whose rho_bs shares all floor to zero still forward the
+    whole pool to the largest-share DC."""
+    rng = np.random.RandomState(1)
+    N, B, S = NET.dims
+    sizes = [3, 2, 2, 3]                        # tiny pools -> floors to 0
+    data = _ue_batches(rng, sizes)
+    w = _fixed_plan(0).to_w()
+    w["rho_nb"] = jnp.full((N, B), 0.45)        # offload most points
+    w["rho_bs"] = jnp.tile(jnp.asarray([[0.4, 0.6]]), (B, 1))
+    ue_data, dc_data = realize_offloading(rng, data, w, NET)
+    assert _total_points(ue_data, dc_data) == sum(sizes)
+    # the remainder went to the larger-share DC, not silently to DC 0
+    if dc_data[1] is not None and dc_data[0] is not None:
+        assert len(dc_data[1]["y"]) >= len(dc_data[0]["y"])
+
+
+def test_realize_offloading_random_plans_conserve():
+    rng = np.random.RandomState(2)
+    N, B, S = NET.dims
+    for trial in range(5):
+        sizes = rng.randint(1, 200, N)
+        data = _ue_batches(rng, list(sizes))
+        w = _fixed_plan(0).to_w()
+        rho = rng.rand(N, B)
+        w["rho_nb"] = jnp.asarray(rho / rho.sum(1, keepdims=True)
+                                  * rng.rand(N, 1))
+        rbs = rng.rand(B, S)
+        w["rho_bs"] = jnp.asarray(rbs / rbs.sum(1, keepdims=True))
+        ue_data, dc_data = realize_offloading(rng, data, w, NET)
+        assert _total_points(ue_data, dc_data) == sizes.sum()

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core import estimation, fedprox
 from repro.core.convergence import (MLConstants, a_norm_stats,

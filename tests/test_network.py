@@ -3,7 +3,7 @@ delay/energy model sanity (eqs. 12-40)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.network import (NetworkConfig, data_configuration, make_network,
                            network_costs, round_delay, round_energy)

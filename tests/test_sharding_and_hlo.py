@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -36,7 +36,10 @@ def test_param_specs_cover_all_leaves():
 @settings(max_examples=30, deadline=None)
 @given(dim=st.integers(1, 64), axis=st.sampled_from(["data", "model"]))
 def test_sanitize_spec_divisibility(dim, axis):
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    try:
+        mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    except TypeError:   # jax <= 0.4.x signature: tuple of (name, size)
+        mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 4)))
     spec = sanitize_spec(P(axis), (dim,), mesh)
     size = mesh.shape[axis]
     if dim % size == 0:

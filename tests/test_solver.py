@@ -3,7 +3,7 @@ monotonic improvement, centralized-vs-distributed agreement, rounding."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.convergence import MLConstants
 from repro.network import NetworkConfig, make_network
