@@ -1,19 +1,42 @@
 """Microbenchmarks (wall-clock on the local device): CE-FL round step on a
-small LM, FedProx kernel vs unfused XLA, decode step latency."""
+small LM, FedProx kernel vs unfused XLA, decode step latency, and the
+tree-path vs flat-plane-path comparison for a FULL simulated CE-FL round
+(local FedProx training + eq.-11 aggregation through the executors).
+
+``main`` writes ``BENCH_kernels.json`` at the repo root — the start of the
+repo's recorded perf trajectory (the file is committed deliberately; see
+docs/kernels.md).
+
+    PYTHONPATH=src python -m benchmarks.microbench           # full
+    PYTHONPATH=src python -m benchmarks.microbench --smoke   # CI smoke
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import csv_line
 from repro.configs import get_config, reduced
+from repro.configs.cefl_paper import ClassifierConfig
+from repro.core.api import RoundPlan
+from repro.core.engine import MeshExecutor, SimExecutor
 from repro.core.round_step import CEFLHyper, build_cefl_round_step, \
     make_dpu_meta
 from repro.data import make_token_batches
 from repro.kernels import ops, ref
 from repro.models import lm as L
+from repro.models.classifier import classifier_loss, init_classifier_params
+from repro.network import NetworkConfig, make_network
+from repro.solver.greedy import fixed_aggregator
+from repro.solver.variables import round_indicators
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _timeit(fn, n=10):
@@ -42,6 +65,7 @@ def bench_round_step():
     b = {k: jnp.asarray(v) for k, v in b.items()}
     us = _timeit(lambda: step(params, b, meta)[1]["loss"], n=5)
     csv_line("cefl_round_step_smoke_lm", us, "gamma=2,n_dpu=2,seq=128")
+    return us
 
 
 def bench_fedprox_kernel():
@@ -56,6 +80,7 @@ def bench_fedprox_kernel():
     us_k = _timeit(lambda: kern(x, g, a))
     us_u = _timeit(lambda: unfused(x, g, a))
     csv_line("fedprox_kernel_interpret", us_k, f"unfused_xla={us_u:.1f}us")
+    return us_k, us_u
 
 
 def bench_decode_step():
@@ -66,12 +91,100 @@ def bench_decode_step():
     step = jax.jit(lambda t, c: L.lm_decode_step(p, cfg, t, c))
     us = _timeit(lambda: step(tok, cache)[0], n=10)
     csv_line("decode_step_smoke_qwen3", us, "B=4,cache=512")
+    return us
 
 
-def main():
-    bench_round_step()
-    bench_fedprox_kernel()
-    bench_decode_step()
+# ----------------------------------------------- tree vs plane round -----
+
+def _sim_round_setup(*, smoke=False):
+    """A full simulated CE-FL round on the benchmark config: 12 DPUs (8
+    UEs + 4 DCs live), classifier model, gamma=4, m=0.5."""
+    n_ue, n_bs, n_dc = (4, 2, 2) if smoke else (8, 4, 4)
+    D = 64 if smoke else 512
+    gamma = 2 if smoke else 4
+    img = (14, 14, 1)
+    net = make_network(NetworkConfig(num_ue=n_ue, num_bs=n_bs,
+                                     num_dc=n_dc, seed=0))
+    ccfg = ClassifierConfig(input_shape=img, hidden=(64,))
+    p0 = init_classifier_params(jax.random.PRNGKey(0), ccfg)
+    n_dpu = n_ue + n_dc
+    plan = RoundPlan.from_w(round_indicators(
+        fixed_aggregator(net, np.full(n_ue, float(D)), 0)))
+    plan = plan.replace(gamma=np.full(n_dpu, gamma, float),
+                        m=np.full(n_dpu, 0.5))
+    rng = np.random.RandomState(0)
+    datasets = [{"x": jnp.asarray(rng.randn(D, *img).astype(np.float32)),
+                 "y": jnp.asarray(rng.randint(0, 10, D))}
+                for _ in range(n_dpu)]
+    key = jax.random.PRNGKey(0)
+    meta = dict(n_dpu=n_dpu, D=D, gamma=gamma, m=0.5, model="mlp-14x14-64")
+
+    def run(executor):
+        p, loss = executor.run_round(
+            p0, plan, datasets, loss_fn=classifier_loss, eta=0.05,
+            mu=0.01, theta=None, agg="cefl", key=key)
+        jax.block_until_ready(getattr(p, "data", p))
+        return loss
+    return run, meta
+
+
+def bench_sim_round_tree_vs_plane(*, smoke=False):
+    """Time the SAME full simulated round through SimExecutor on the
+    per-leaf tree path vs the flat-plane Pallas path."""
+    run, meta = _sim_round_setup(smoke=smoke)
+    n = 2 if smoke else 5
+    tree_exec = SimExecutor(use_plane=False)
+    plane_exec = SimExecutor(use_plane=True)
+    us_tree = _timeit(lambda: run(tree_exec), n=n)
+    us_plane = _timeit(lambda: run(plane_exec), n=n)
+    speedup = us_tree / us_plane
+    csv_line("sim_round_tree", us_tree, f"{meta}")
+    csv_line("sim_round_plane", us_plane, f"speedup={speedup:.2f}x")
+    return us_tree, us_plane, meta
+
+
+def bench_mesh_round_tree_vs_plane(*, smoke=False):
+    """Same comparison through MeshExecutor (the jitted SPMD round)."""
+    run, meta = _sim_round_setup(smoke=smoke)
+    n = 2 if smoke else 5
+    tree_exec = MeshExecutor(use_plane=False)
+    plane_exec = MeshExecutor(use_plane=True)
+    us_tree = _timeit(lambda: run(tree_exec), n=n)
+    us_plane = _timeit(lambda: run(plane_exec), n=n)
+    csv_line("mesh_round_tree", us_tree, f"{meta}")
+    csv_line("mesh_round_plane", us_plane,
+             f"speedup={us_tree / us_plane:.2f}x")
+    return us_tree, us_plane
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    results = {}
+    s_tree, s_plane, meta = bench_sim_round_tree_vs_plane(smoke=smoke)
+    results["sim_round_tree_us"] = round(s_tree, 1)
+    results["sim_round_plane_us"] = round(s_plane, 1)
+    results["sim_round_speedup"] = round(s_tree / s_plane, 3)
+    m_tree, m_plane = bench_mesh_round_tree_vs_plane(smoke=smoke)
+    results["mesh_round_tree_us"] = round(m_tree, 1)
+    results["mesh_round_plane_us"] = round(m_plane, 1)
+    results["mesh_round_speedup"] = round(m_tree / m_plane, 3)
+    us_k, us_u = bench_fedprox_kernel()
+    results["fedprox_kernel_us"] = round(us_k, 1)
+    results["fedprox_unfused_xla_us"] = round(us_u, 1)
+    if not smoke:
+        results["cefl_round_step_lm_us"] = round(bench_round_step(), 1)
+        results["decode_step_qwen3_us"] = round(bench_decode_step(), 1)
+    out = {"bench": "kernels+round", "smoke": smoke, "config": meta,
+           "backend": jax.default_backend(), "results": results}
+    path = os.path.join(_ROOT, "BENCH_kernels.json")
+    if not smoke:
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"[microbench] wrote {path}")
+    print(json.dumps(results, indent=2))
+    return out
 
 
 if __name__ == "__main__":

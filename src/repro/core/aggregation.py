@@ -4,47 +4,83 @@ The aggregator receives scaled accumulated gradients D_i * d_i (BSs sum the
 gradients of their associated UEs first, Sec. II-D), sums them, and applies
 
     x^{t+1} = x^t - (theta * eta / D^t) * sum_i D_i d_i.
+
+Weight contract (docs/kernels.md): every public entry point in this module
+takes ABSOLUTE dataset sizes D_i and normalizes them exactly once through
+:func:`normalize_weights` — the single normalization point of the tree
+path.  The kernel level (``kernels.ops.nova_aggregate_plane`` and below)
+takes already-normalized weights and never re-normalizes.
+
+All entry points accept either pytrees or :class:`~repro.kernels.plane.
+ParamPlane` values; plane inputs stay on the flat layout end-to-end and
+dispatch to the fused Pallas aggregation kernel.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+from repro.kernels.ops import normalize_weights  # noqa: F401  (canonical
+#   import path for the weight contract; defined at the kernel-wrapper
+#   layer so kernels/ops.py has no dependency on core)
+from repro.kernels.plane import ParamPlane
+
+
+def _stack_planes(planes: Sequence[ParamPlane]) -> jnp.ndarray:
+    return jnp.stack([p.data for p in planes], axis=0)
+
 
 def bs_relay_sum(scaled_gradients: Sequence, groups: Sequence[Sequence[int]]):
     """Sum scaled gradients per BS group (keeps the uplink payload one model
-    wide per BS, Sec. II-D footnote 2).  Returns one summed pytree per group."""
+    wide per BS, Sec. II-D footnote 2).  Returns one summed pytree (or
+    ParamPlane) per group."""
     out = []
     for g in groups:
         if not g:
             continue
         acc = scaled_gradients[g[0]]
-        for i in g[1:]:
-            acc = jax.tree_util.tree_map(jnp.add, acc, scaled_gradients[i])
-        out.append(acc)
+        if isinstance(acc, ParamPlane):
+            data = acc.data
+            for i in g[1:]:
+                data = data + scaled_gradients[i].data
+            out.append(acc.with_data(data))
+        else:
+            for i in g[1:]:
+                acc = jax.tree_util.tree_map(jnp.add, acc,
+                                             scaled_gradients[i])
+            out.append(acc)
     return out
 
 
 def aggregate(x_t, d_list: List, weights: Sequence[float], *, theta: float,
               eta: float):
-    """eq. (11).  weights: D_i (absolute dataset sizes); normalized inside."""
-    total = float(sum(weights))
+    """eq. (11).  weights: absolute D_i; normalized here (once)."""
+    w = normalize_weights(weights)
+    if isinstance(x_t, ParamPlane):
+        out = ops.nova_aggregate_plane(x_t.data, _stack_planes(d_list), w,
+                                       theta * eta)
+        return x_t.with_data(out)
     acc = None
-    for d_i, D_i in zip(d_list, weights):
-        scaled = jax.tree_util.tree_map(lambda x: (D_i / total) * x, d_i)
+    for d_i, w_i in zip(d_list, w):
+        scaled = jax.tree_util.tree_map(lambda x: w_i * x, d_i)
         acc = scaled if acc is None else jax.tree_util.tree_map(
             jnp.add, acc, scaled)
     return jax.tree_util.tree_map(lambda x, d: x - theta * eta * d, x_t, acc)
 
 
 def fedavg_aggregate(local_params: List, weights: Sequence[float]):
-    """Plain FedAvg: weighted average of local models."""
-    total = float(sum(weights))
+    """Plain FedAvg: weighted average of local models (absolute weights)."""
+    w = normalize_weights(weights)
+    if isinstance(local_params[0], ParamPlane):
+        stack = _stack_planes(local_params)
+        return local_params[0].with_data(
+            jnp.einsum("n,nrl->rl", w, stack))
     acc = None
-    for p_i, D_i in zip(local_params, weights):
-        scaled = jax.tree_util.tree_map(lambda x: (D_i / total) * x, p_i)
+    for p_i, w_i in zip(local_params, w):
+        scaled = jax.tree_util.tree_map(lambda x: w_i * x, p_i)
         acc = scaled if acc is None else jax.tree_util.tree_map(
             jnp.add, acc, scaled)
     return acc
@@ -53,14 +89,8 @@ def fedavg_aggregate(local_params: List, weights: Sequence[float]):
 def fednova_aggregate(x_t, d_list: List, weights: Sequence[float],
                       gammas: Sequence[float], *, eta: float):
     """FedNova (Wang et al. 2020): x^{t+1} = x^t - eta * tau_eff * sum p_i d_i
-    with tau_eff = sum_i p_i gamma_i (momentum-free case)."""
-    total = float(sum(weights))
-    p = [w / total for w in weights]
-    tau_eff = sum(pi * gi for pi, gi in zip(p, gammas))
-    acc = None
-    for d_i, pi in zip(d_list, p):
-        scaled = jax.tree_util.tree_map(lambda x: pi * x, d_i)
-        acc = scaled if acc is None else jax.tree_util.tree_map(
-            jnp.add, acc, scaled)
-    return jax.tree_util.tree_map(
-        lambda x, d: x - eta * tau_eff * d, x_t, acc)
+    with tau_eff = sum_i p_i gamma_i (momentum-free case).  Absolute
+    weights; this is eq. 11 with theta = tau_eff."""
+    p = normalize_weights(weights)
+    tau_eff = float(jnp.sum(p * jnp.asarray(gammas, jnp.float32)))
+    return aggregate(x_t, d_list, weights, theta=tau_eff, eta=eta)

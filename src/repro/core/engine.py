@@ -37,6 +37,7 @@ from repro.core.api import (DecisionContext, EngineOptions, RoundCallback,
                             RoundPlan, RoundReport, RunResult, get_strategy,
                             weighted_mean)
 from repro.core.round_step import CEFLHyper, build_cefl_round_step
+from repro.kernels.plane import as_plane, as_tree
 from repro.network.costs import network_costs, round_delay, round_energy
 
 
@@ -154,12 +155,23 @@ class SimExecutor:
     iteration — numerically identical to the sequential path (per-DPU PRNG
     streams are preserved), but with G-DPU groups costing one dispatch
     instead of G.
+
+    With ``use_plane`` (default), parameters stay on the flat parameter
+    plane end-to-end: local training runs the fused Pallas kernels
+    (``fedprox.local_train*`` plane backend) and eq.-11 aggregation is one
+    fused kernel launch over the stacked d_i planes.  ``use_plane=False``
+    is the pre-plane per-leaf tree path, kept for equivalence tests and
+    the tree-vs-plane benchmark.
     """
     batch_homogeneous: bool = True
+    use_plane: bool = True
 
     def run_round(self, params, plan: RoundPlan, datasets, *, loss_fn,
                   eta: float, mu: float, theta: Optional[float], agg: str,
                   key):
+        backend = "plane" if self.use_plane else "tree"
+        if self.use_plane:
+            params = as_plane(params)
         gammas, ms = _plan_settings(plan)
         live = [(i, d) for i, d in enumerate(datasets)
                 if d is not None and len(d["y"])]
@@ -170,22 +182,24 @@ class SimExecutor:
         if self.batch_homogeneous:
             groups: Dict[tuple, list] = {}
             for j, (i, d) in enumerate(live):
-                D = len(d["y"])
-                bucket = fedprox._bucket(max(1, int(round(ms[i] * D))))
+                bucket = fedprox._bucket(
+                    fedprox.batch_size(len(d["y"]), ms[i]))
                 groups.setdefault(
                     (int(gammas[i]), float(ms[i]), bucket), []).append(j)
             for (gamma, m, _bucket), idxs in groups.items():
                 out = fedprox.local_train_batched(
                     params, loss_fn, [live[j][1] for j in idxs],
                     gamma=gamma, m_frac=m, eta=eta, mu=mu,
-                    keys=[keys[j] for j in idxs])
+                    keys=[keys[j] for j in idxs],
+                    backend=backend, keep_planes=self.use_plane)
                 for j, r in zip(idxs, out):
                     results[j] = r
         else:
             for j, (i, d) in enumerate(live):
                 results[j] = fedprox.local_train(
                     params, loss_fn, d, gamma=int(gammas[i]),
-                    m_frac=float(ms[i]), eta=eta, mu=mu, key=keys[j])
+                    m_frac=float(ms[i]), eta=eta, mu=mu, key=keys[j],
+                    backend=backend, keep_planes=self.use_plane)
         new_params = _aggregate(params, results, agg, eta=eta, theta=theta)
         mean_loss = weighted_mean([r.loss for r in results],
                                   [r.num_examples for r in results])
@@ -209,8 +223,14 @@ class MeshExecutor:
     The jitted step is cached per (loss_fn, gamma_max, DPU count, batch
     bucket, mu); theta is applied outside the jit so per-round tau_eff
     changes never recompile.
+
+    With ``use_plane`` (default) the round runs on the flat parameter
+    plane: the jitted step receives a ``(n_dpu, R, LANE)`` ParamPlane and
+    ``round_step`` dispatches to the fused Pallas kernels (interpret mode
+    on CPU) — zero pytree flatten/unflatten in the inner loop.
     """
     agg_schedule: str = "all_reduce"
+    use_plane: bool = True
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def build_step(self, micro_loss_fn, hyper: CEFLHyper, *, jit=True):
@@ -273,6 +293,14 @@ class MeshExecutor:
                 "m_frac": jnp.asarray(m_eff, jnp.float32),
                 "weight": jnp.asarray(w, jnp.float32)}
         step = self._get_step(loss_fn, n, bucket, gamma_max, mu, eta)
+        if self.use_plane:
+            plane = as_plane(params)
+            new_stack, metrics = step(plane.broadcast(n), batch, meta)
+            # theta=1 inside the step; rescale outside the jit so per-round
+            # tau_eff never triggers recompilation (plane arithmetic only)
+            new_params = plane.with_data(
+                plane.data + theta_val * (new_stack.data[0] - plane.data))
+            return new_params, float(metrics["loss"])
         stacked = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params)
         new_stack, metrics = step(stacked, batch, meta)
@@ -337,6 +365,11 @@ class Engine:
         rng = np.random.RandomState(opts.seed)
         key = jax.random.PRNGKey(opts.seed)
         params = init_params
+        if getattr(self.executor, "use_plane", False):
+            # plane-backed executors keep params flat across rounds;
+            # tree views are materialized only at API boundaries (eval,
+            # RoundReport, the final RunResult)
+            params = as_plane(init_params)
         agg = getattr(self.strategy, "aggregation", "cefl")
         mu = opts.mu if getattr(self.strategy, "proximal", True) else 0.0
         reports: List[RoundReport] = []
@@ -362,7 +395,7 @@ class Engine:
             cum_D += Dl
             gammas, ms = _plan_settings(plan)
             report = RoundReport(
-                round=t, acc=float(eval_fn(params)), loss=mean_loss,
+                round=t, acc=float(eval_fn(as_tree(params))), loss=mean_loss,
                 energy=E, delay=Dl, cum_energy=cum_E, cum_delay=cum_D,
                 aggregator=plan.aggregator,
                 dc_points=tuple(0 if d is None else len(d["y"])
@@ -375,4 +408,4 @@ class Engine:
                 stop = (cb(report) is True) or stop
             if stop:
                 break
-        return RunResult(reports=reports, params=params)
+        return RunResult(reports=reports, params=as_tree(params))

@@ -9,16 +9,31 @@ the FedNova-normalized accumulated gradient
 
 ``local_train`` is the simulation-level entry point (one DPU, its own
 dataset); the mesh-native vectorized round lives in repro.core.round_step.
+
+Backends (``backend=`` on both entry points):
+
+* ``"plane"`` (default, the hot path): parameters/gradients live on the
+  flat ``(G, R, LANE)`` parameter plane (``kernels.plane``).  All gamma
+  local iterations of a whole homogeneous DPU group run as ONE jitted
+  ``lax.scan`` whose per-step body is a vmapped loss/grad evaluation plus
+  a single fused Pallas launch (``fedprox_accum_2d``) doing the proximal
+  update AND the eq.-10 accumulation — no per-leaf tree_map chains, no
+  per-step host sync.
+* ``"tree"`` — the pre-plane per-leaf reference path, kept for
+  equivalence tests and the tree-vs-plane benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.plane import ParamPlane, as_plane
 
 
 def a_coefficients(gamma: int, eta: float, mu: float) -> jnp.ndarray:
@@ -34,17 +49,29 @@ def a_norms(gamma, eta, mu):
 
 @dataclasses.dataclass
 class LocalResult:
-    params: dict          # x_i^{(t, gamma_i)}
-    d_i: jnp.ndarray      # normalized accumulated gradient (pytree)
+    params: object        # x_i^{(t, gamma_i)} (pytree or ParamPlane)
+    d_i: object           # normalized accumulated gradient (same kind)
     num_examples: int     # D_i^{(t)}
     gamma: int
     sgd_flops: float      # processed examples * gamma (for cost models)
     loss: float = float("nan")   # mean mini-batch loss over the gamma steps
 
 
+def batch_size(num_examples: int, m_frac: float) -> int:
+    """clamp(round(m_frac * D), 1, D) — the one mini-batch size rule
+    (0 for a degenerate D == 0 dataset)."""
+    if num_examples <= 0:
+        return 0
+    return max(1, min(num_examples, int(round(m_frac * num_examples))))
+
+
 def sample_minibatch(key, num_examples: int, m_frac: float):
-    """Uniform without-replacement mini-batch indices (size m_frac * D)."""
-    bsz = max(1, int(round(m_frac * num_examples)))
+    """Uniform without-replacement mini-batch indices of size
+    ``batch_size(D, m_frac)``; empty for a degenerate D == 0 dataset
+    (offloading splits can leave a DPU with nothing)."""
+    bsz = batch_size(num_examples, m_frac)
+    if bsz == 0:
+        return jnp.zeros((0,), jnp.int32)
     return jax.random.choice(key, num_examples, (bsz,), replace=False)
 
 
@@ -57,12 +84,131 @@ def _bucket(n: int) -> int:
     return b
 
 
+# ------------------------------------------------- plane hot path -----
+
+_PLANE_TRAIN_CACHE = {}
+
+
+def _plane_train_fn(loss_fn, spec):
+    """ONE jitted function running the full gamma-step local-training loop
+    of a DPU group on parameter planes.  The tree view needed by
+    ``loss_fn`` is a compile-time slice/reshape of the plane inside the
+    traced graph (its transpose re-flattens the gradient) — there is no
+    host-level flatten/unflatten anywhere in the loop."""
+    key = (loss_fn, spec)
+    if key not in _PLANE_TRAIN_CACHE:
+        interpret = ops.INTERPRET
+
+        def plane_loss(pp, batch, w):
+            return loss_fn(spec.unflatten(pp), batch, w)
+
+        vgrad = jax.vmap(jax.value_and_grad(plane_loss))
+
+        def run(p_stack, anchor, batches, weights, a, eta, mu):
+            """p_stack: (G, R, LANE); anchor: (R, LANE); ``batches``
+            leaves (gamma, G, bucket, ...); weights (gamma, G, bucket);
+            a: (gamma,) FedNova coefficients."""
+            G = p_stack.shape[0]
+            ones = jnp.ones((G,), jnp.float32)
+            acc0 = jnp.zeros_like(p_stack)
+
+            def body(carry, inp):
+                p, acc = carry
+                batch_k, w_k, a_k = inp
+                losses, g = vgrad(p, batch_k, w_k)
+                p, acc = ops.fedprox_accum_plane(
+                    p, g, anchor, acc, a_k * ones, ones, eta, mu,
+                    interpret=interpret)
+                return (p, acc), losses
+
+            (p, acc), losses = jax.lax.scan(
+                body, (p_stack, acc0), (batches, weights, a))
+            return p, acc, losses      # losses: (gamma, G)
+
+        _PLANE_TRAIN_CACHE[key] = jax.jit(run)
+    return _PLANE_TRAIN_CACHE[key]
+
+
+@functools.lru_cache(maxsize=512)
+def _choice_all_steps(num_examples: int, bsz: int):
+    """Jitted vmapped without-replacement choice: (gamma, 2) step keys ->
+    (gamma, bsz) indices.  Identical draws to per-step sample_minibatch
+    calls (jax.random is elementwise in the key), but ONE dispatch per DPU
+    per round instead of gamma."""
+    return jax.jit(jax.vmap(
+        lambda k: jax.random.choice(k, num_examples, (bsz,),
+                                    replace=False)))
+
+
+def _gather_group_batches(datasets, step_keys, Ds, bucket, gamma, m_frac):
+    """Pre-sample every (step, DPU) mini-batch (same PRNG streams as the
+    sequential path) and stack to (gamma, G, bucket, ...).  The batched
+    restructuring — one vmapped choice and one gather per DPU for ALL
+    gamma steps — is part of the plane hot path: host-side dispatches per
+    round drop from O(gamma * G) to O(G)."""
+    per_dpu_batches, per_dpu_wts = [], []
+    for j, d in enumerate(datasets):
+        bsz = batch_size(Ds[j], m_frac)
+        idx = np.asarray(_choice_all_steps(Ds[j], bsz)(step_keys[j]))
+        pad = np.concatenate(
+            [idx, np.zeros((gamma, bucket - bsz), idx.dtype)], axis=1)
+        wts = np.zeros((gamma, bucket), np.float32)
+        wts[:, :bsz] = 1.0
+        per_dpu_wts.append(wts)
+        per_dpu_batches.append(
+            jax.tree_util.tree_map(lambda x: x[pad.ravel()].reshape(
+                (gamma, bucket) + x.shape[1:]), d))
+    batches = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=1), *per_dpu_batches)
+    weights = jnp.asarray(np.stack(per_dpu_wts, axis=1), jnp.float32)
+    return batches, weights
+
+
+def _local_train_batched_plane(params, loss_fn, datasets, *, gamma, m_frac,
+                               eta, mu, keys, keep_planes=False):
+    G = len(datasets)
+    plane = as_plane(params)
+    spec = plane.spec
+    Ds = [jax.tree_util.tree_leaves(d)[0].shape[0] for d in datasets]
+    bszs = [batch_size(D, m_frac) for D in Ds]
+    bucket = _bucket(max(bszs))
+    assert all(_bucket(b) == bucket for b in bszs), \
+        "grouping must put same-bucket DPUs together"
+    a = a_coefficients(gamma, eta, mu)
+    a1 = float(jnp.sum(a))
+    # one vmapped split for the whole group (same per-DPU streams as
+    # sequential `jax.random.split(k, gamma)` calls)
+    step_keys = jax.vmap(lambda k: jax.random.split(k, gamma))(
+        jnp.stack(keys))
+    batches, weights = _gather_group_batches(datasets, step_keys, Ds,
+                                             bucket, gamma, m_frac)
+    run = _plane_train_fn(loss_fn, spec)
+    p_stack, acc, losses = run(plane.broadcast(G).data, plane.data,
+                               batches, weights, a,
+                               jnp.asarray(eta, jnp.float32),
+                               jnp.asarray(mu, jnp.float32))
+    d_stack = acc / a1
+    mean_loss = np.asarray(losses).mean(axis=0)         # (G,)
+
+    def view(stack, j):
+        p = ParamPlane(data=stack[j], spec=spec)
+        return p if keep_planes else p.to_tree()
+
+    return [LocalResult(
+        params=view(p_stack, j), d_i=view(d_stack, j),
+        num_examples=Ds[j], gamma=gamma,
+        sgd_flops=float(gamma) * m_frac * Ds[j],
+        loss=float(mean_loss[j])) for j in range(G)]
+
+
+# ------------------------------------------------ tree reference path -----
+
 _STEP_CACHE = {}
 
 
 def _prox_step(loss_fn, params, anchor, batch, weights, eta, mu):
     """One proximal SGD step on g_i(x, x^t) (eq. 6) — the single source of
-    truth for both the sequential and the vmapped batched paths."""
+    truth for both the sequential and the vmapped batched tree paths."""
     loss, gF = jax.value_and_grad(loss_fn)(params, batch, weights)
     new = jax.tree_util.tree_map(
         lambda p, g, x0: p - eta * (g + mu * (p - x0)),
@@ -76,15 +222,8 @@ def _prox_step_fn(loss_fn):
     return _STEP_CACHE[loss_fn]
 
 
-def local_train(params, loss_fn: Callable, data: dict, *, gamma: int,
-                m_frac: float, eta: float, mu: float, key) -> LocalResult:
-    """Run gamma proximal SGD steps at one DPU.
-
-    loss_fn(params, batch, example_weights) -> weighted mean loss.
-    data: dict of arrays with leading dim D_i (the DPU's current dataset).
-    Mini-batches are padded to power-of-two buckets (zero example weights)
-    so the jitted step is shared across DPUs and rounds.
-    """
+def _local_train_tree(params, loss_fn, data, *, gamma, m_frac, eta, mu,
+                      key) -> LocalResult:
     anchor = params
     D = jax.tree_util.tree_leaves(data)[0].shape[0]
     a = a_coefficients(gamma, eta, mu)
@@ -126,22 +265,12 @@ def _prox_step_batched_fn(loss_fn):
     return _BATCH_STEP_CACHE[loss_fn]
 
 
-def local_train_batched(params, loss_fn: Callable, datasets, *, gamma: int,
-                        m_frac: float, eta: float, mu: float, keys):
-    """``local_train`` for a homogeneous-(gamma, m) group of DPUs, all
-    starting from the same global ``params``, through ONE vmapped proximal
-    step per local iteration instead of one jitted call per DPU.
-
-    ``datasets``: list of per-DPU data dicts (sizes may differ — every
-    DPU's mini-batch must land in the same power-of-two bucket, which the
-    caller guarantees by grouping).  ``keys``: one PRNG key per DPU; each
-    is split into gamma step keys exactly like the sequential path, so the
-    per-DPU mini-batch draws match ``local_train`` bit-for-bit.
-    """
+def _local_train_batched_tree(params, loss_fn, datasets, *, gamma, m_frac,
+                              eta, mu, keys):
     G = len(datasets)
     anchor = params
     Ds = [jax.tree_util.tree_leaves(d)[0].shape[0] for d in datasets]
-    bszs = [max(1, int(round(m_frac * D))) for D in Ds]
+    bszs = [batch_size(D, m_frac) for D in Ds]
     bucket = _bucket(max(bszs))
     assert all(_bucket(b) == bucket for b in bszs), \
         "grouping must put same-bucket DPUs together"
@@ -180,13 +309,102 @@ def local_train_batched(params, loss_fn: Callable, datasets, *, gamma: int,
         loss=float(loss_sum[j] / gamma)) for j in range(G)]
 
 
+# --------------------------------------------------- public entry points -----
+
+def _empty_result(params, gamma: int, keep_planes: bool) -> LocalResult:
+    """A D == 0 DPU trains nothing: params unchanged, d_i = 0, nan loss."""
+    if keep_planes:
+        plane = as_plane(params)
+        return LocalResult(params=plane,
+                           d_i=plane.with_data(jnp.zeros_like(plane.data)),
+                           num_examples=0, gamma=gamma, sgd_flops=0.0)
+    tree = params.to_tree() if isinstance(params, ParamPlane) else params
+    return LocalResult(params=tree,
+                       d_i=jax.tree_util.tree_map(jnp.zeros_like, tree),
+                       num_examples=0, gamma=gamma, sgd_flops=0.0)
+
+
+def local_train(params, loss_fn: Callable, data: dict, *, gamma: int,
+                m_frac: float, eta: float, mu: float, key,
+                backend: str = "plane",
+                keep_planes: bool = False) -> LocalResult:
+    """Run gamma proximal SGD steps at one DPU.
+
+    loss_fn(params, batch, example_weights) -> weighted mean loss.
+    data: dict of arrays with leading dim D_i (the DPU's current dataset).
+    Mini-batches are padded to power-of-two buckets (zero example weights)
+    so the jitted step is shared across DPUs and rounds.
+
+    ``backend="plane"`` (default) runs the whole loop on the flat
+    parameter plane through the fused Pallas kernels (the per-DPU PRNG
+    stream and numerics match the tree path to float tolerance).
+    """
+    if jax.tree_util.tree_leaves(data)[0].shape[0] == 0:
+        return _empty_result(params, gamma,
+                             keep_planes and backend != "tree")
+    if backend == "tree":
+        return _local_train_tree(params, loss_fn, data, gamma=gamma,
+                                 m_frac=m_frac, eta=eta, mu=mu, key=key)
+    return _local_train_batched_plane(
+        params, loss_fn, [data], gamma=gamma, m_frac=m_frac, eta=eta,
+        mu=mu, keys=[key], keep_planes=keep_planes)[0]
+
+
+def local_train_batched(params, loss_fn: Callable, datasets, *, gamma: int,
+                        m_frac: float, eta: float, mu: float, keys,
+                        backend: str = "plane",
+                        keep_planes: bool = False):
+    """``local_train`` for a homogeneous-(gamma, m) group of DPUs, all
+    starting from the same global ``params``.
+
+    ``datasets``: list of per-DPU data dicts (sizes may differ — every
+    DPU's mini-batch must land in the same power-of-two bucket, which the
+    caller guarantees by grouping).  ``keys``: one PRNG key per DPU; each
+    is split into gamma step keys exactly like the sequential path, so the
+    per-DPU mini-batch draws match ``local_train`` bit-for-bit.
+
+    ``backend="plane"`` (default): ONE jitted scan for all gamma steps —
+    a vmapped loss/grad plus a single fused kernel launch per local
+    iteration.  ``backend="tree"``: one vmapped jitted step per iteration
+    with per-leaf tree_map update/accumulation (the reference path).
+    ``keep_planes`` returns ParamPlane-backed results (the executors'
+    end-to-end plane path); ignored by the tree backend.
+    """
+    live = [j for j, d in enumerate(datasets)
+            if jax.tree_util.tree_leaves(d)[0].shape[0] > 0]
+    if len(live) < len(datasets):
+        out = [_empty_result(params, gamma,
+                             keep_planes and backend != "tree")
+               for _ in datasets]
+        if live:
+            sub = local_train_batched(
+                params, loss_fn, [datasets[j] for j in live], gamma=gamma,
+                m_frac=m_frac, eta=eta, mu=mu,
+                keys=[keys[j] for j in live], backend=backend,
+                keep_planes=keep_planes)
+            for j, r in zip(live, sub):
+                out[j] = r
+        return out
+    if backend == "tree":
+        return _local_train_batched_tree(params, loss_fn, datasets,
+                                         gamma=gamma, m_frac=m_frac,
+                                         eta=eta, mu=mu, keys=keys)
+    return _local_train_batched_plane(params, loss_fn, datasets,
+                                      gamma=gamma, m_frac=m_frac, eta=eta,
+                                      mu=mu, keys=keys,
+                                      keep_planes=keep_planes)
+
+
 def verify_accumulation_identity(params0, result: LocalResult, *, eta, mu):
     """Check eq. (9): sum_l a_l grad F = (x^t - x^{t,gamma})/eta  holds only
     for mu=0 (with prox, the update uses grad g, not grad F).  Returns the
     max abs deviation of the mu=0 identity — used by tests."""
+    from repro.kernels.plane import as_tree
+    res_params = as_tree(result.params)
+    res_d = as_tree(result.d_i)
     diff = jax.tree_util.tree_map(
-        lambda x0, xg: (x0 - xg) / eta, params0, result.params)
+        lambda x0, xg: (x0 - xg) / eta, as_tree(params0), res_params)
     a1 = float(jnp.sum(a_coefficients(result.gamma, eta, mu)))
     dev = jax.tree_util.tree_map(
-        lambda d, acc: jnp.max(jnp.abs(d - acc * a1)), diff, result.d_i)
+        lambda d, acc: jnp.max(jnp.abs(d - acc * a1)), diff, res_d)
     return max(float(x) for x in jax.tree_util.tree_leaves(dev))

@@ -25,11 +25,13 @@ as a per-example mask.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.plane import ParamPlane
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +60,15 @@ def build_cefl_round_step(loss_fn: Callable, hyper: CEFLHyper):
     Returns round_step(params, batch, meta) -> (new_params, metrics) where
     every ``params`` leaf has a leading n_dpu axis, ``batch`` leaves are
     (n_dpu, n_micro, mb, ...), and meta = {'gamma': (n_dpu,) i32,
-    'm_frac': (n_dpu,) f32, 'weight': (n_dpu,) f32 (D_i/D, sums to 1)}.
+    'm_frac': (n_dpu,) f32, 'weight': (n_dpu,) f32 (absolute D_i sizes;
+    normalized inside the step — already-normalized weights pass through
+    unchanged)}.
+
+    ``params`` may instead be a :class:`~repro.kernels.plane.ParamPlane`
+    with ``(n_dpu, R, LANE)`` data: the round then runs on the flat plane
+    through the fused Pallas kernels (interpret mode on CPU) and returns a
+    ParamPlane — the hot path both executors use.  ``grad_dtype`` applies
+    to the tree path only; planes accumulate in f32 (the master dtype).
     """
     eta, mu, theta = hyper.eta, hyper.mu, hyper.theta
     gamma_max, n_micro = hyper.gamma_max, hyper.n_micro
@@ -132,10 +142,75 @@ def build_cefl_round_step(loss_fn: Callable, hyper: CEFLHyper):
         d_i = jax.tree_util.tree_map(lambda x: x / norm.astype(x.dtype), acc)
         return d_i, loss_val
 
+    def round_step_plane(plane: ParamPlane, batch, meta):
+        """The same round on the flat parameter plane: per-iteration
+        proximal update + eq.-10 accumulation are ONE fused Pallas launch
+        over all DPUs (``fedprox_accum_2d``), and the eq.-11 reduction is
+        the fused aggregation kernel — no per-leaf tree_map chains.  The
+        tree view ``loss_fn`` needs is a compile-time slice of the plane
+        inside the traced graph."""
+        spec = plane.spec
+        p0 = plane.data                       # (n_dpu, R, LANE)
+        n = p0.shape[0]
+        gamma_v = meta["gamma"]
+        m_v = meta["m_frac"]
+        w = meta["weight"].astype(jnp.float32)
+        w = w / jnp.sum(w)                    # weight contract: absolute ok
+        interpret = ops.INTERPRET
+        mb = jax.tree_util.tree_leaves(batch)[0].shape[2]
+        plane_grad = jax.value_and_grad(
+            lambda pp, micro, mask: loss_fn(spec.unflatten(pp), micro, mask),
+            has_aux=True)
+
+        def grad_one(pp, batch_i, m_i):
+            """grad of F_i wrt the DPU's plane row: microbatch gradient
+            accumulation stays on the plane (eq. 7 + mini-batch mask)."""
+            mask = (jnp.arange(mb) < jnp.ceil(m_i * mb)).astype(jnp.float32)
+
+            def micro_step(carry, micro):
+                loss_s, g_acc = carry
+                (loss, _aux), gp = plane_grad(pp, micro, mask)
+                return (loss_s + loss, g_acc + gp), None
+
+            (loss_s, g), _ = jax.lax.scan(
+                micro_step, (jnp.zeros((), jnp.float32),
+                             jnp.zeros_like(pp)), batch_i)
+            inv = 1.0 / n_micro
+            return loss_s * inv, g * inv
+
+        vgrad = jax.vmap(grad_one)
+
+        def body(k, carry):
+            p, acc, _ = carry
+            losses, g = vgrad(p, batch, m_v)              # (n,), (n, R, LANE)
+            if eta * mu > 0:
+                a_k = jnp.exp((gamma_v.astype(jnp.float32) - 1.0 - k)
+                              * jnp.log(1.0 - eta * mu))
+            else:
+                a_k = jnp.ones((n,), jnp.float32)
+            active = (k < gamma_v).astype(jnp.float32)
+            p_new, acc = ops.fedprox_accum_plane(
+                p, g, p0, acc, a_k, active, eta, mu, interpret=interpret)
+            return (p_new, acc, losses)
+
+        acc0 = jnp.zeros_like(p0)
+        _p_fin, acc, losses = jax.lax.fori_loop(
+            0, gamma_max, body, (p0, acc0, jnp.zeros((n,), jnp.float32)))
+        norm = a_l1(gamma_v, eta, mu)
+        d = acc / norm[:, None, None]
+        # eq. (11): fused weighted reduction + update, every replica row
+        new_data = ops.nova_aggregate_plane(p0, d, w, theta * eta,
+                                            interpret=interpret)
+        metrics = {"loss": jnp.mean(losses)}
+        return plane.with_data(new_data), metrics
+
     def round_step(params, batch, meta):
+        if isinstance(params, ParamPlane):
+            return round_step_plane(params, batch, meta)
         d, aux = jax.vmap(local)(params, batch, meta["gamma"],
                                  meta["m_frac"])
-        w = meta["weight"]
+        w = meta["weight"].astype(jnp.float32)
+        w = w / jnp.sum(w)                    # weight contract: absolute ok
         # eq. (11): the only cross-DPU reduction
         d_bar = jax.tree_util.tree_map(
             lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=(0, 0)), d)
@@ -151,6 +226,9 @@ def build_cefl_round_step(loss_fn: Callable, hyper: CEFLHyper):
 
 
 def make_dpu_meta(n_dpu: int, *, gammas=None, m_fracs=None, weights=None):
+    """``weights`` follow the absolute-size contract (docs/kernels.md):
+    pass D_i dataset sizes; the round step normalizes once internally
+    (pre-normalized weights are fine too — normalization is idempotent)."""
     gammas = jnp.asarray(gammas if gammas is not None
                          else [1] * n_dpu, jnp.int32)
     m_fracs = jnp.asarray(m_fracs if m_fracs is not None
@@ -158,5 +236,4 @@ def make_dpu_meta(n_dpu: int, *, gammas=None, m_fracs=None, weights=None):
     if weights is None:
         weights = [1.0 / n_dpu] * n_dpu
     weights = jnp.asarray(weights, jnp.float32)
-    weights = weights / jnp.sum(weights)
     return {"gamma": gammas, "m_frac": m_fracs, "weight": weights}

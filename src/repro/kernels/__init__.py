@@ -1,4 +1,8 @@
 # Pallas TPU kernels for CE-FL's per-round compute hot spots + serving.
 # <name>.py: pl.pallas_call + BlockSpec; ops.py: jitted wrappers;
+# plane.py: the canonical flat (R, LANE) parameter layout the kernels eat;
 # ref.py: pure-jnp oracles (tests assert allclose across shape/dtype sweeps).
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, plane, ref  # noqa: F401
+from repro.kernels.plane import (  # noqa: F401
+    FlatSpec, ParamPlane, as_plane, as_tree, spec_of,
+)

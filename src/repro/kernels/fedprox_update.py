@@ -1,16 +1,31 @@
-"""Pallas TPU kernel: fused FedProx local update (paper eqs. 5-6).
+"""Pallas TPU kernels: fused FedProx local update (paper eqs. 5-6, 8-10).
 
-    x_new = x - eta * (g + mu * (x - anchor))
+    x_new   = x - active * eta * (g + mu * (x - anchor))
+    acc_new = acc + active * a_k * g            # eq. 10 numerator
 
 Unfused, XLA emits sub/mul/add chains with 5 HBM reads + 3 writes over
 params-sized buffers; the fused kernel does 3 reads + 1 write per element in
 one VMEM pass.  This op runs every local SGD iteration of every DPU, on
 every parameter — the highest-frequency elementwise hot spot in CE-FL.
 
-Layout: parameters are flattened and padded to (rows, 1024) with rows a
-multiple of 8; tiles of (256, 1024) f32 = 3 x 1MB operands per step fit VMEM
-comfortably (v5e ~128MB VMEM per core) while keeping the last dim a multiple
-of the 128-lane register width.
+Layout: parameters live on the flat parameter plane (see ``plane.py``):
+(R, LANE) f32 with R a multiple of 8.  On TPU the row tile is the largest
+power-of-two multiple of 8 dividing R (capped at ROWS=256): tiles of
+(256, 1024) f32 keep 3 x 1MB operands per step comfortably in VMEM while
+the last dim stays a multiple of the 128-lane register width.  In
+interpret mode (CPU fallback) the grid collapses to a SINGLE whole-array
+block: the interpreter's per-grid-step cost is a full-buffer copy, so one
+fused step is the fast path and the same pallas_call lowers to plain XLA
+elementwise ops under jit.
+
+Two entry points:
+
+* :func:`fedprox_update_2d` — single plane, plain eq. 5-6 update.
+* :func:`fedprox_accum_2d` — the batched ``(G, R, LANE)`` variant used by
+  the group/mesh hot paths: one launch updates every DPU of the group AND
+  folds the per-step FedNova coefficient ``a_k`` and the activity mask
+  into the eq.-10 accumulator, so a local iteration is one kernel launch
+  instead of a per-leaf tree_map chain plus a separate accumulation pass.
 """
 from __future__ import annotations
 
@@ -21,7 +36,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANE = 1024          # last-dim tile (multiple of 128)
-ROWS = 256           # rows per tile (multiple of 8)
+ROWS = 256           # max rows per tile (multiple of 8)
+
+
+def row_tile(r: int, cap: int = ROWS) -> int:
+    """Largest power-of-two multiple of 8 dividing ``r`` (<= cap)."""
+    assert r % 8 == 0, r
+    t = 8
+    while t * 2 <= cap and r % (t * 2) == 0:
+        t *= 2
+    return t
 
 
 def _kernel(x_ref, g_ref, a_ref, eta_ref, mu_ref, o_ref):
@@ -37,11 +61,12 @@ def _kernel(x_ref, g_ref, a_ref, eta_ref, mu_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fedprox_update_2d(x, g, anchor, eta, mu, *, interpret: bool = False):
-    """x, g, anchor: (R, LANE) with R % ROWS == 0."""
+    """x, g, anchor: (R, LANE) with R % 8 == 0."""
     R, L = x.shape
-    assert L == LANE and R % ROWS == 0, (R, L)
-    grid = (R // ROWS,)
-    spec = pl.BlockSpec((ROWS, LANE), lambda i: (i, 0))
+    assert L == LANE and R % 8 == 0, (R, L)
+    rows = R if interpret else row_tile(R)
+    grid = (R // rows,)
+    spec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
     eta = jnp.asarray(eta, jnp.float32).reshape(1, 1)
     mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
@@ -54,3 +79,61 @@ def fedprox_update_2d(x, g, anchor, eta, mu, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x, g, anchor, eta, mu)
+
+
+def _accum_kernel(x_ref, g_ref, anc_ref, acc_ref, coef_ref, act_ref,
+                  eta_ref, mu_ref, ox_ref, oacc_ref):
+    eta = eta_ref[0, 0]
+    mu = mu_ref[0, 0]
+    a_k = coef_ref[0, :][:, None, None]         # (gblk, 1, 1)
+    act = act_ref[0, :][:, None, None]
+    x = x_ref[...].astype(jnp.float32)          # (gblk, rows, LANE)
+    g = g_ref[...].astype(jnp.float32)
+    anc = anc_ref[...].astype(jnp.float32)      # (rows, LANE) or (gblk, ...)
+    upd = x - act * eta * (g + mu * (x - anc))
+    ox_ref[...] = upd.astype(ox_ref.dtype)
+    oacc_ref[...] = (acc_ref[...].astype(jnp.float32)
+                     + (act * a_k) * g).astype(oacc_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedprox_accum_2d(x, g, anchor, acc, coef, active, eta, mu, *,
+                     interpret: bool = False):
+    """Batched fused proximal step + eq.-10 accumulation.
+
+    x, g, acc: (G, R, LANE); anchor: (R, LANE) shared or (G, R, LANE)
+    per-DPU; coef, active: (G,) per-DPU a_{i,k} and activity mask.
+    Returns (x_new, acc_new), both (G, R, LANE):
+
+        x_new   = x - active*eta*(g + mu*(x - anchor))
+        acc_new = acc + active*coef*g
+    """
+    G, R, L = x.shape
+    assert L == LANE and R % 8 == 0, (G, R, L)
+    assert g.shape == x.shape and acc.shape == x.shape
+    if interpret:
+        gblk, rows = G, R            # one whole-array block (see module doc)
+    else:
+        gblk, rows = 1, row_tile(R)  # VMEM-sized tiles, one DPU per step
+    grid = (G // gblk, R // rows)
+    bspec = pl.BlockSpec((gblk, rows, LANE), lambda i, j: (i, j, 0))
+    if anchor.ndim == 2:
+        aspec = pl.BlockSpec((rows, LANE), lambda i, j: (j, 0))
+    else:
+        assert anchor.shape == x.shape
+        aspec = bspec
+    pspec = pl.BlockSpec((1, gblk), lambda i, j: (0, i))  # per-group scalars
+    sspec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    coef = jnp.asarray(coef, jnp.float32).reshape(1, G)
+    active = jnp.asarray(active, jnp.float32).reshape(1, G)
+    eta = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[bspec, bspec, aspec, bspec, pspec, pspec, sspec, sspec],
+        out_specs=[bspec, bspec],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype),
+                   jax.ShapeDtypeStruct(acc.shape, acc.dtype)],
+        interpret=interpret,
+    )(x, g, anchor, acc, coef, active, eta, mu)

@@ -8,8 +8,21 @@ weighted reduction with the model update avoids materializing sum_i w_i d_i
 in HBM: one pass reads the (n_dpu, block) gradient tile plus the x tile and
 writes x_new.
 
-Tiles: (n_dpu, ROWS=128, LANE=1024) f32 -> n_dpu x 512KB + 512KB in VMEM;
-fine for n_dpu <= ~64.
+Weight contract: ``weights`` here are ALREADY NORMALIZED (sum to 1) — the
+kernels never re-normalize.  Tree/plane-level wrappers (``ops.py``,
+``core.aggregation``) take absolute D_i sizes and normalize exactly once
+via ``core.aggregation.normalize_weights`` (see docs/kernels.md).
+
+Tiles: (n_dpu, ROWS<=128, LANE=1024) f32 -> n_dpu x 512KB + 512KB in VMEM;
+fine for n_dpu <= ~64.  Planes with fewer rows use the largest
+power-of-two row tile that divides R (see ``fedprox_update.row_tile``).
+
+Two entry points:
+
+* :func:`nova_aggregate_2d` — single global plane x: (R, LANE).
+* :func:`nova_aggregate_stacked_2d` — x: (n_dpu, R, LANE), each row
+  updated with the SAME weighted reduction (the mesh round keeps one
+  replica of the global model per DPU row).
 """
 from __future__ import annotations
 
@@ -19,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.fedprox_update import row_tile
+
 LANE = 1024
 ROWS = 128
 
@@ -26,7 +41,7 @@ ROWS = 128
 def _kernel(x_ref, d_ref, w_ref, se_ref, o_ref):
     scale = se_ref[0, 0]                     # theta * eta
     x = x_ref[...].astype(jnp.float32)
-    d = d_ref[...].astype(jnp.float32)       # (n_dpu, ROWS, LANE)
+    d = d_ref[...].astype(jnp.float32)       # (n_dpu, rows, LANE)
     w = w_ref[0, :]                           # (n_dpu,)
     agg = jnp.einsum("n,nrl->rl", w, d)
     o_ref[...] = (x - scale * agg).astype(o_ref.dtype)
@@ -35,19 +50,53 @@ def _kernel(x_ref, d_ref, w_ref, se_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def nova_aggregate_2d(x, d_stack, weights, theta_eta, *,
                       interpret: bool = False):
-    """x: (R, LANE); d_stack: (n_dpu, R, LANE); weights: (n_dpu,)."""
+    """x: (R, LANE); d_stack: (n_dpu, R, LANE); weights: (n_dpu,),
+    normalized (sum to 1)."""
     R, L = x.shape
     n = d_stack.shape[0]
-    assert L == LANE and R % ROWS == 0 and d_stack.shape == (n, R, L)
-    grid = (R // ROWS,)
-    xspec = pl.BlockSpec((ROWS, LANE), lambda i: (i, 0))
-    dspec = pl.BlockSpec((n, ROWS, LANE), lambda i: (0, i, 0))
+    assert L == LANE and R % 8 == 0 and d_stack.shape == (n, R, L)
+    rows = R if interpret else row_tile(R, ROWS)
+    grid = (R // rows,)
+    xspec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
+    dspec = pl.BlockSpec((n, rows, LANE), lambda i: (0, i, 0))
     wspec = pl.BlockSpec((1, n), lambda i: (0, 0))
     sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[xspec, dspec, wspec, sspec],
+        out_specs=xspec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, d_stack, weights.reshape(1, n).astype(jnp.float32),
+      jnp.asarray(theta_eta, jnp.float32).reshape(1, 1))
+
+
+def _kernel_stacked(x_ref, d_ref, w_ref, se_ref, o_ref):
+    scale = se_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)        # (n_dpu, rows, LANE)
+    d = d_ref[...].astype(jnp.float32)        # (n_dpu, rows, LANE)
+    w = w_ref[0, :]
+    agg = jnp.einsum("n,nrl->rl", w, d)
+    o_ref[...] = (x - scale * agg[None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nova_aggregate_stacked_2d(x, d_stack, weights, theta_eta, *,
+                              interpret: bool = False):
+    """x, d_stack: (n_dpu, R, LANE); weights: (n_dpu,), normalized.  Every
+    row of x receives the same eq.-11 update (per-DPU global replicas)."""
+    n, R, L = x.shape
+    assert L == LANE and R % 8 == 0 and d_stack.shape == (n, R, L)
+    rows = R if interpret else row_tile(R, ROWS)
+    grid = (R // rows,)
+    xspec = pl.BlockSpec((n, rows, LANE), lambda i: (0, i, 0))
+    wspec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        _kernel_stacked,
+        grid=grid,
+        in_specs=[xspec, xspec, wspec, sspec],
         out_specs=xspec,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,

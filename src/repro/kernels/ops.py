@@ -1,68 +1,103 @@
 """Jitted public wrappers around the Pallas kernels.
 
-Handle pytree flattening / padding to kernel tile shapes, dispatch to the
-kernel (interpret=True on CPU — the TPU path is the same pallas_call), and
-reassemble pytrees.
+Two API levels:
+
+* **Plane level** (the hot path): ``fedprox_plane``, ``fedprox_accum_plane``,
+  ``nova_aggregate_plane`` operate directly on ``(R, LANE)`` /
+  ``(G, R, LANE)`` parameter planes (see ``plane.py``) — no flattening,
+  no padding, no host round-trips.  This is what ``core.fedprox``,
+  ``core.round_step`` and the engine executors call every round.
+* **Tree level** (convenience / API boundaries): ``fedprox_update``,
+  ``nova_aggregate`` accept pytrees and convert through a cached
+  :class:`~repro.kernels.plane.FlatSpec` — the layout is computed once per
+  structure instead of re-deriving treedef/shapes/offsets on every call.
+
+Dispatch rule: the pallas_call is identical on every backend; on CPU the
+kernels run in ``interpret=True`` mode (traced into XLA ops when jitted),
+on TPU they compile to Mosaic.  ``kernels/ref.py`` holds the pure-jnp
+oracles used by the parity tests.
+
+Weight contract (see docs/kernels.md): tree-level ``nova_aggregate`` takes
+ABSOLUTE dataset sizes and normalizes exactly once; the plane/kernel level
+takes already-normalized weights and never re-normalizes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import fedprox_update as _fp
 from repro.kernels import nova_aggregate as _na
+from repro.kernels.plane import FlatSpec, ParamPlane, spec_of  # noqa: F401
 from repro.kernels.swa_decode_attention import swa_decode_attention  # noqa: F401
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 INTERPRET = not _ON_TPU
 
 
-def _flatten_pad(tree, lane, rows):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
-                            for x in leaves])
-    n = flat.shape[0]
-    block = lane * rows
-    pad = (-n) % block
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, lane), treedef, [x.shape for x in leaves], \
-        [x.dtype for x in leaves], n
+def _interp(interpret):
+    return INTERPRET if interpret is None else interpret
 
 
-def _unflatten(flat2d, treedef, shapes, dtypes, n):
-    flat = flat2d.reshape(-1)[:n]
-    out, off = [], 0
-    for s, dt in zip(shapes, dtypes):
-        k = int(np.prod(s)) if s else 1
-        out.append(flat[off:off + k].reshape(s).astype(dt))
-        off += k
-    return jax.tree_util.tree_unflatten(treedef, out)
+def normalize_weights(weights: Sequence) -> jnp.ndarray:
+    """Absolute D_i -> simplex weights (f32).  THE single normalization
+    point of the tree-level weight contract (docs/kernels.md); the
+    kernel level below takes already-normalized weights.  Re-exported as
+    ``core.aggregation.normalize_weights``."""
+    w = jnp.asarray(weights, jnp.float32)
+    return w / jnp.sum(w)
 
+
+# ------------------------------------------------------ plane level -----
+
+def fedprox_plane(x, g, anchor, eta, mu, *, interpret: bool = None):
+    """Fused x <- x - eta*(g + mu*(x - anchor)) on (R, LANE) planes."""
+    return _fp.fedprox_update_2d(x, g, anchor, eta, mu,
+                                 interpret=_interp(interpret))
+
+
+def fedprox_accum_plane(x, g, anchor, acc, coef, active, eta, mu, *,
+                        interpret: bool = None):
+    """Batched proximal step + eq.-10 accumulation on (G, R, LANE) planes
+    (one launch per local iteration for a whole DPU group)."""
+    return _fp.fedprox_accum_2d(x, g, anchor, acc, coef, active, eta, mu,
+                                interpret=_interp(interpret))
+
+
+def nova_aggregate_plane(x, d_stack, weights, theta_eta, *,
+                         interpret: bool = None):
+    """eq. 11 on planes.  ``weights`` must already be normalized.  ``x``
+    may be (R, LANE) or (n_dpu, R, LANE) (stacked per-DPU replicas)."""
+    if x.ndim == 3:
+        return _na.nova_aggregate_stacked_2d(x, d_stack, weights, theta_eta,
+                                             interpret=_interp(interpret))
+    return _na.nova_aggregate_2d(x, d_stack, weights, theta_eta,
+                                 interpret=_interp(interpret))
+
+
+# ------------------------------------------------------- tree level -----
 
 def fedprox_update(params, grads, anchor, eta, mu, *,
                    interpret: bool = None):
     """Fused x <- x - eta*(g + mu*(x - anchor)) over a whole pytree."""
-    interpret = INTERPRET if interpret is None else interpret
-    x2, treedef, shapes, dtypes, n = _flatten_pad(params, _fp.LANE, _fp.ROWS)
-    g2, *_ = _flatten_pad(grads, _fp.LANE, _fp.ROWS)
-    a2, *_ = _flatten_pad(anchor, _fp.LANE, _fp.ROWS)
-    out = _fp.fedprox_update_2d(x2, g2, a2, eta, mu, interpret=interpret)
-    return _unflatten(out, treedef, shapes, dtypes, n)
+    spec = spec_of(params)
+    out = fedprox_plane(spec.flatten(params), spec.flatten(grads),
+                        spec.flatten(anchor), eta, mu, interpret=interpret)
+    return spec.unflatten(out)
 
 
 def nova_aggregate(x, d_list: Sequence, weights, theta_eta, *,
                    interpret: bool = None):
-    """x <- x - theta*eta*sum_i w_i d_i over pytrees (eq. 11)."""
-    interpret = INTERPRET if interpret is None else interpret
-    x2, treedef, shapes, dtypes, n = _flatten_pad(x, _na.LANE, _na.ROWS)
-    ds = [_flatten_pad(d, _na.LANE, _na.ROWS)[0] for d in d_list]
-    d_stack = jnp.stack(ds, axis=0)
-    w = jnp.asarray(weights, jnp.float32)
-    w = w / jnp.sum(w)
-    out = _na.nova_aggregate_2d(x2, d_stack, w, theta_eta,
-                                interpret=interpret)
-    return _unflatten(out, treedef, shapes, dtypes, n)
+    """x <- x - theta*eta*sum_i w_i d_i over pytrees (eq. 11).
+
+    ``weights``: absolute dataset sizes D_i — normalized here (the single
+    normalization point for this path, see docs/kernels.md).
+    """
+    spec = spec_of(x)
+    d_stack = jnp.stack([spec.flatten(d) for d in d_list], axis=0)
+    w = normalize_weights(weights)
+    out = nova_aggregate_plane(spec.flatten(x), d_stack, w, theta_eta,
+                               interpret=interpret)
+    return spec.unflatten(out)

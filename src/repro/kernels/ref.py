@@ -13,6 +13,21 @@ def fedprox_update_ref(x, g, anchor, eta, mu):
     return out.astype(x.dtype)
 
 
+def fedprox_accum_ref(x, g, anchor, acc, coef, active, eta, mu):
+    """Batched proximal step + eq.-10 accumulation (fedprox_accum_2d).
+    x, g, acc: (G, R, L); anchor: (R, L) or (G, R, L); coef/active: (G,)."""
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    anc = anchor.astype(jnp.float32)
+    if anc.ndim == 2:
+        anc = anc[None]
+    act = active.astype(jnp.float32)[:, None, None]
+    ak = coef.astype(jnp.float32)[:, None, None]
+    x_new = xf - act * eta * (gf + mu * (xf - anc))
+    acc_new = acc.astype(jnp.float32) + act * ak * gf
+    return x_new.astype(x.dtype), acc_new.astype(acc.dtype)
+
+
 def nova_aggregate_ref(x, d_stack, weights, theta_eta):
     agg = jnp.einsum("n,n...->...", weights.astype(jnp.float32),
                      d_stack.astype(jnp.float32))

@@ -21,6 +21,7 @@ from repro.configs import get_config, reduced
 from repro.core.engine import MeshExecutor
 from repro.core.round_step import CEFLHyper, make_dpu_meta
 from repro.data import make_token_batches
+from repro.kernels.plane import ParamPlane
 from repro.models import lm as L
 from repro.training.checkpoint import save_checkpoint
 
@@ -38,6 +39,9 @@ def main(argv=None):
     ap.add_argument("--mu", type=float, default=0.01)
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-sized config variant")
+    ap.add_argument("--tree", action="store_true",
+                    help="run the per-leaf tree round instead of the "
+                         "flat-plane Pallas hot path")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -49,8 +53,14 @@ def main(argv=None):
           f"{args.n_dpu} DPUs x gamma={args.gamma}")
     key = jax.random.PRNGKey(args.seed)
     params0 = L.init_lm_params(key, cfg, jnp.float32)
-    params = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (args.n_dpu,) + x.shape), params0)
+    if args.tree:
+        params = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (args.n_dpu,) + x.shape),
+            params0)
+    else:
+        # flat-plane hot path: params stay (n_dpu, R, LANE) for the whole
+        # run; the tree view is materialized only at the checkpoint
+        params = ParamPlane.from_tree(params0).broadcast(args.n_dpu)
 
     def loss_fn(p, micro, mask):
         return L.lm_loss(p, cfg, micro, example_mask=mask, remat=True,
@@ -79,9 +89,9 @@ def main(argv=None):
         losses.append(loss)
         print(f"  round {t:4d}  loss {loss:8.4f}  ({time.time()-t0:.2f}s)")
     if args.checkpoint:
-        save_checkpoint(args.checkpoint,
-                        jax.tree_util.tree_map(lambda x: x[0], params),
-                        step=args.steps)
+        final = (params[0].to_tree() if isinstance(params, ParamPlane)
+                 else jax.tree_util.tree_map(lambda x: x[0], params))
+        save_checkpoint(args.checkpoint, final, step=args.steps)
         print(f"[train] checkpoint -> {args.checkpoint}")
     assert losses[-1] < losses[0], "loss did not decrease"
     print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
