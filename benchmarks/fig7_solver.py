@@ -1,7 +1,17 @@
 """Paper Fig. 7: decentralized solver — (a) centralized vs decentralized for
-different consensus-round budgets J; (b) convergence vs network size |N|."""
+different consensus-round budgets J; (b) convergence vs network size |N| —
+plus the solver-scaling trajectory (jit vs ref backend) that ISSUE 3 pins:
+per-plan wall-clock at N in {20, 100, 500, 2000} UEs, recorded to
+``BENCH_solver.json`` at the repo root (committed; see docs/solver.md).
+
+    PYTHONPATH=src python -m benchmarks.fig7_solver           # full + json
+    PYTHONPATH=src python -m benchmarks.fig7_solver --smoke   # CI smoke
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import numpy as np
@@ -10,6 +20,91 @@ from benchmarks.common import QUICK, csv_line, setup
 from repro.core import MLConstants
 from repro.network import NetworkConfig, make_network
 from repro.solver import ObjectiveWeights, PDHyper, sca
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------- solver scaling -----
+
+def _scaling_case(n_ue, n_bs, n_dc):
+    """UE population scales, BS/DC tiers stay fixed (the paper's setting:
+    device count dominates infrastructure count)."""
+    net = make_network(NetworkConfig(num_ue=n_ue, num_bs=n_bs,
+                                     num_dc=n_dc, seed=0))
+    nd = n_ue + n_dc
+    consts = MLConstants(L=4.0, theta_i=np.full(nd, 2.0),
+                         sigma_i=np.ones(nd), zeta1=2.0, zeta2=1.0)
+    rng = np.random.RandomState(n_ue)
+    D_bar = rng.normal(2000.0, 200.0, n_ue).clip(100)
+    return net, consts, D_bar
+
+
+def solver_scaling(ns=(20, 100, 500, 2000), *, n_bs=8, n_dc=4,
+                   max_ref_n=2000, outer=2, repeats=3):
+    """Wall-clock per plan (centralized Algorithm 1, the EngineOptions
+    default) for the jitted backend vs the numpy oracle.  The jit number is
+    the warm re-solve — fresh rates + arrivals each repeat, hitting the
+    compile cache exactly like the per-round engine path; the first
+    (compiling) solve is recorded separately as ``jit_cold_s``.  The ref
+    backend re-traces and materializes the (nC x P) constraint jacobian
+    every call (~minutes + GBs past a few thousand UEs); cap it with
+    ``max_ref_n`` when sweeping larger populations."""
+    ow = ObjectiveWeights()
+    rows = []
+    for n in ns:
+        net, consts, D_bar = _scaling_case(n, n_bs, n_dc)
+        kw = dict(distributed=False, max_outer=outer, pd=PDHyper())
+        t0 = time.perf_counter()
+        sca.solve(net, D_bar, consts, ow, backend="jit", **kw)
+        cold = time.perf_counter() - t0
+        rng = np.random.RandomState(1)
+        warm = []
+        for _ in range(repeats):
+            net_t = net.resample_rates(rng, 0.15)
+            D_t = D_bar * rng.uniform(0.9, 1.1, D_bar.shape)
+            t0 = time.perf_counter()
+            sca.solve(net_t, D_t, consts, ow, backend="jit", **kw)
+            warm.append(time.perf_counter() - t0)
+        jit_s = min(warm)
+        ref_s = None
+        if n <= max_ref_n:
+            t0 = time.perf_counter()
+            sca.solve(net, D_bar, consts, ow, backend="ref", **kw)
+            ref_s = time.perf_counter() - t0
+        row = {"n_ue": n, "n_bs": n_bs, "n_dc": n_dc,
+               "jit_warm_s": round(jit_s, 4), "jit_cold_s": round(cold, 3),
+               "ref_s": None if ref_s is None else round(ref_s, 3),
+               "speedup": None if ref_s is None else round(ref_s / jit_s, 2)}
+        rows.append(row)
+        csv_line(f"solver_scaling_n{n}", jit_s * 1e6,
+                 f"ref={ref_s}s speedup={row['speedup']}")
+    return rows
+
+
+def run_scaling(*, smoke=False):
+    if smoke:
+        rows = solver_scaling(ns=(8, 20), n_bs=4, n_dc=2, max_ref_n=20,
+                              outer=2, repeats=2)
+        for r in rows:
+            # regression gate: the jit backend must stay comfortably ahead
+            # of the oracle (observed ~200x; 3x is the acceptance floor)
+            assert r["speedup"] is not None and r["speedup"] >= 3.0, r
+        print(json.dumps(rows, indent=2))
+        return rows
+    rows = solver_scaling()
+    out = {"bench": "solver_scaling",
+           "mode": "centralized (EngineOptions default), max_outer=2, "
+                   "PDHyper defaults; jit_warm_s = warm re-solve with "
+                   "resampled rates/arrivals (compile-cache hit)",
+           "backend": __import__("jax").default_backend(),
+           "results": rows}
+    path = os.path.join(_ROOT, "BENCH_solver.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"[fig7_solver] wrote {path}")
+    print(json.dumps(rows, indent=2))
+    return rows
 
 
 def main():
@@ -64,6 +159,12 @@ def main():
     csv_line("fig7_gap_shrinks_with_J", elapsed * 1e6,
              gaps[js[-1]] <= gaps[js[0]] + 0.05)
 
+    print("\n== Solver backend scaling (jit vs ref) ==")
+    run_scaling(smoke=QUICK)
+
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv[1:]:
+        run_scaling(smoke=True)
+    else:
+        main()

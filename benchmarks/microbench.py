@@ -83,6 +83,39 @@ def bench_fedprox_kernel():
     return us_k, us_u
 
 
+def bench_solver_backends(*, smoke=False):
+    """Per-plan latency of the network-aware solver: jitted batched backend
+    (warm, compile-cache hit) vs the numpy oracle (``solver/ref.py``).  The
+    full scaling trajectory lives in benchmarks/fig7_solver.py ->
+    BENCH_solver.json; this is the one-line smoke variant."""
+    from repro.core import MLConstants
+    from repro.solver import ObjectiveWeights, sca
+    n_ue, n_bs, n_dc = (6, 3, 2) if smoke else (12, 4, 3)
+    net = make_network(NetworkConfig(num_ue=n_ue, num_bs=n_bs,
+                                     num_dc=n_dc, seed=0))
+    nd = n_ue + n_dc
+    consts = MLConstants(L=4.0, theta_i=np.full(nd, 2.0),
+                         sigma_i=np.ones(nd), zeta1=2.0, zeta2=1.0)
+    ow = ObjectiveWeights()
+    D_bar = np.full(n_ue, 1500.0)
+    kw = dict(distributed=False, max_outer=2)
+
+    def run(backend):
+        return sca.solve(net, D_bar, consts, ow, backend=backend,
+                         **kw).objective_history[-1]
+
+    run("jit")   # compile once; the engine path always re-solves warm
+    t0 = time.time()
+    run("jit")
+    us_jit = (time.time() - t0) * 1e6
+    t0 = time.time()
+    run("ref")
+    us_ref = (time.time() - t0) * 1e6
+    csv_line("solver_plan_jit", us_jit, f"ref={us_ref:.0f}us "
+             f"speedup={us_ref / us_jit:.1f}x n_ue={n_ue}")
+    return us_jit, us_ref
+
+
 def bench_decode_step():
     cfg = reduced(get_config("qwen3-32b"))
     p = L.init_lm_params(jax.random.PRNGKey(0), cfg, jnp.float32)
@@ -172,6 +205,10 @@ def main(argv=None):
     us_k, us_u = bench_fedprox_kernel()
     results["fedprox_kernel_us"] = round(us_k, 1)
     results["fedprox_unfused_xla_us"] = round(us_u, 1)
+    us_sj, us_sr = bench_solver_backends(smoke=smoke)
+    results["solver_plan_jit_us"] = round(us_sj, 1)
+    results["solver_plan_ref_us"] = round(us_sr, 1)
+    results["solver_plan_speedup"] = round(us_sr / us_sj, 2)
     if not smoke:
         results["cefl_round_step_lm_us"] = round(bench_round_step(), 1)
         results["decode_step_qwen3_us"] = round(bench_decode_step(), 1)

@@ -47,6 +47,8 @@ class EngineOptions:
     reoptimize_every: int = 1
     solver_outer: int = 4
     distributed_solver: bool = False   # centralized is faster for sims
+    solver_backend: str = "jit"     # "jit" (batched, compiled) | "ref"
+                                    # (numpy oracle, solver/ref.py)
     gamma_default: int = 2
     m_default: float = 0.5
     rate_jitter: float = 0.15

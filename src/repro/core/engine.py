@@ -348,7 +348,10 @@ class Engine:
                prev_plan: Optional[RoundPlan]) -> RoundPlan:
         ctx = DecisionContext(round=t, consts=self.consts, ow=self.ow,
                               opts=self.opts, prev_plan=prev_plan)
-        plan = self.strategy.decide(net_t, D_bar, ctx)
+        # strategies receive D_bar as a device array: the jit solver backend
+        # consumes it directly (no numpy bounce on the decision hot path)
+        plan = self.strategy.decide(net_t, jnp.asarray(D_bar, jnp.float32),
+                                    ctx)
         if self.validate_plans:
             plan.validate(net_t)
         return plan

@@ -15,9 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import (DecisionContext, RoundPlan, register_strategy)
-from repro.network.costs import network_costs
 from repro.solver import greedy as greedy_mod
 from repro.solver import sca
+from repro.solver.objective import apply_required_deltas
 from repro.solver.variables import round_indicators
 
 
@@ -37,10 +37,13 @@ class CEFLStrategy:
 
     def decide(self, net, D_bar, ctx: DecisionContext) -> RoundPlan:
         opts = ctx.opts
+        # warm start from the previous plan: device arrays end-to-end (the
+        # jit backend flattens them straight onto the solver plane)
         w0 = ctx.prev_plan.to_w() if ctx.prev_plan is not None else None
-        res = sca.solve(net, D_bar, ctx.consts, ctx.ow,
-                        max_outer=opts.solver_outer,
-                        distributed=opts.distributed_solver, w0=w0)
+        res = sca.solve(net, jnp.asarray(D_bar, jnp.float32), ctx.consts,
+                        ctx.ow, max_outer=opts.solver_outer,
+                        distributed=opts.distributed_solver, w0=w0,
+                        backend=opts.solver_backend)
         return RoundPlan.from_w(res.w_rounded)
 
 
@@ -92,9 +95,7 @@ class _ConventionalFedL:
         base = _heuristic_base(net, D_bar, ctx.opts)
         w = dict(greedy_mod.fixed_aggregator(net, D_bar, 0, base))
         w["rho_nb"] = jnp.zeros_like(w["rho_nb"])
-        w = round_indicators(w)
-        c = network_costs(w, net, D_bar)
-        w["delta_A"], w["delta_R"] = c["delta_A_req"], c["delta_R_req"]
+        w = apply_required_deltas(round_indicators(w), net, D_bar)
         return RoundPlan.from_w(w)
 
 

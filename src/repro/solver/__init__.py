@@ -1,12 +1,14 @@
 from repro.solver.consensus import (  # noqa: F401
-    consensus_error, consensus_rounds, consensus_weights,
+    consensus_error, consensus_rounds, consensus_scan, consensus_weights,
 )
 from repro.solver.constraints import (  # noqa: F401
     constraint_vector, max_violation, num_constraints,
 )
 from repro.solver.objective import (  # noqa: F401
-    ObjectiveWeights, ml_bound, objective, objective_breakdown,
+    ObjectiveWeights, apply_required_deltas, ml_bound, objective,
+    objective_breakdown,
 )
-from repro.solver.primal_dual import PDHyper, solve_surrogate  # noqa: F401
+from repro.solver.primal_dual import PDHyper, make_surrogate  # noqa: F401
+from repro.solver.ref import solve_surrogate  # noqa: F401  (oracle Alg. 2)
 from repro.solver.sca import SCAResult, solve  # noqa: F401
-from repro.solver import greedy, variables  # noqa: F401
+from repro.solver import greedy, ref, variables  # noqa: F401

@@ -4,12 +4,26 @@ W_dd' = z, W_dd = 1 - z * degree(d), z < 1 / max_degree.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+def _normalize_adjacency(adjacency: np.ndarray) -> np.ndarray:
+    """Undirected simple-graph view of an adjacency matrix: symmetrized
+    (an edge in either direction counts) and self-loop free.  Without this,
+    a self-loop or a one-directional edge breaks the double stochasticity
+    of the Xiao-Boyd weights (column sums drift from 1), so consensus would
+    no longer preserve the network-wide dual average."""
+    A = (np.asarray(adjacency, dtype=np.float64) != 0).astype(np.float64)
+    A = np.maximum(A, A.T)
+    np.fill_diagonal(A, 0.0)
+    return A
 
 
 def consensus_weights(adjacency: np.ndarray, z_hat: float = 1e-3):
     """Doubly-stochastic weight matrix per the paper's construction."""
-    A = np.asarray(adjacency, dtype=np.float64)
+    A = _normalize_adjacency(adjacency)
     V = A.shape[0]
     deg = A.sum(axis=1)
     z = min(1.0 / V, 1.0 / (deg.max() + 1.0)) - z_hat
@@ -28,7 +42,22 @@ def consensus_rounds(values: np.ndarray, W: np.ndarray, J: int):
     return flat.reshape(out.shape)
 
 
-def consensus_error(values: np.ndarray) -> float:
+def consensus_scan(values: jnp.ndarray, W: jnp.ndarray, J: int):
+    """Jit-friendly :func:`consensus_rounds`: the J mixing rounds run as a
+    single ``lax.scan`` over the (traced) weight matrix, so the whole
+    consensus phase is one XLA while-op instead of J host-side matmuls.
+    ``J`` must be static (it keys the jit cache via the enclosing trace)."""
+    vals = jnp.asarray(values)
+    flat = vals.reshape(vals.shape[0], -1)
+
+    def mix(x, _):
+        return W @ x, None
+
+    out, _ = jax.lax.scan(mix, flat, None, length=J)
+    return out.reshape(vals.shape)
+
+
+def consensus_error(values) -> float:
     """Max deviation from the global average (diagnostic)."""
     flat = np.asarray(values).reshape(values.shape[0], -1)
     return float(np.abs(flat - flat.mean(axis=0, keepdims=True)).max())

@@ -28,15 +28,23 @@ def constraint_vector(w, net, D_bar):
     return jnp.concatenate([c50, c51, c52, c53, b63, b64, b65])
 
 
+def _dims_of(net_or_dims):
+    """Accept a Network / NetView or a bare (N, B, S) tuple, so the jitted
+    backend can size things from dims alone (before any net view exists)."""
+    if isinstance(net_or_dims, tuple):
+        return net_or_dims
+    return net_or_dims.dims
+
+
 def num_constraints(net):
-    N, B, S = net.dims
+    N, B, S = _dims_of(net)
     return N + S + B + S + 1 + N + N
 
 
 def constraint_scale(net):
     """Row scaling for conditioning: delay rows are O(10-100) seconds, the
     binary-enforcement rows are O(1)."""
-    N, B, S = net.dims
+    N, B, S = _dims_of(net)
     return jnp.concatenate([
         jnp.full((N + S,), 1e-2),      # (50)-(51) vs delta_A
         jnp.full((B + S,), 1e-1),      # (52)-(53) vs delta_R

@@ -51,11 +51,9 @@ def _with_aggregator(w, net, D_bar, s_idx: int) -> Dict:
 
 def subnet_datapoints(net, D_bar) -> np.ndarray:
     """Datapoints per DC subnetwork (UEs assigned by subnet_of_ue)."""
-    S = net.cfg.num_dc
-    out = np.zeros(S)
-    for n, s in enumerate(net.subnet_of_ue):
-        out[s] += float(D_bar[n])
-    return out
+    return np.bincount(np.asarray(net.subnet_of_ue),
+                       weights=np.asarray(D_bar, np.float64),
+                       minlength=net.cfg.num_dc)
 
 
 def e2e_rate(net) -> np.ndarray:

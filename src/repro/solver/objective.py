@@ -5,13 +5,15 @@ replaced by the Corollary-1 / eq.-33-style bound with tau ~ delta^A+delta^R)
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import TYPE_CHECKING, Dict
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.convergence import MLConstants
 from repro.network import costs as C
+
+if TYPE_CHECKING:   # annotation-only: keeps repro.solver import-cycle free
+    from repro.core.convergence import MLConstants
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +78,18 @@ def objective(w: Dict, net, D_bar, consts: MLConstants,
     delay = w["delta_A"] + w["delta_R"]
     energy = C.round_energy(costs, ow.xi3_sub)
     return ow.xi1 * ml + ow.xi2 * delay + ow.xi3 * energy
+
+
+def apply_required_deltas(w: Dict, net, D_bar, slack: float = 1.0) -> Dict:
+    """Overwrite the delay budgets delta^A / delta^R with the realized path
+    requirements (eqs. 34/40) times ``slack`` — the feasible-point
+    construction shared by both solver backends and the baseline
+    strategies.  Differentiable; works under jit with a traced net view."""
+    c = C.network_costs(w, net, D_bar)
+    w = dict(w)
+    w["delta_A"] = jnp.asarray(c["delta_A_req"] * slack)
+    w["delta_R"] = jnp.asarray(c["delta_R_req"] * slack)
+    return w
 
 
 def objective_breakdown(w, net, D_bar, consts, ow):

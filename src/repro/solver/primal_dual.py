@@ -1,5 +1,5 @@
-"""Algorithm 2 (PD CE-FL): iterative distributed primal-dual solution of the
-convexified surrogate problem P_{w^l} (eqs. 86-98).
+"""Algorithm 2 (PD CE-FL): batched, jit-traceable distributed primal-dual
+solution of the convexified surrogate problem P_{w^l} (eqs. 86-98).
 
 The proximal surrogate (eqs. 82-85) has an isotropic quadratic around w^l,
 so each node's partial-Lagrangian minimization (93) has the closed form
@@ -8,28 +8,39 @@ so each node's partial-Lagrangian minimization (93) has the closed form
                                / (lambda1 + L_C * sum_c Lambda_d[c]) ]
 
 followed by the eq.-(96) local dual ascent and Algorithm-3 consensus.
-Per the paper's variable decomposition, each node updates only its owned
-block (ownership masks; the shared I_s / delta variables are co-owned by
-the DCs and averaged).  Iterate exchange between rounds is simulated via
-the same communication graph (see DESIGN.md §Assumptions).
+
+This module is the hot jitted backend.  The decision dict is solved as one
+flat (P,) vector (:class:`~repro.solver.variables.WSpec`); per-node work is
+expressed as
+
+  * a ``vmap`` over the V nodes' candidate evaluations (one vjp of the
+    constraint vector per dual row instead of a materialized jacobian),
+  * the Algorithm-2 masked merge as a single ownership-matrix contraction,
+  * the per-node convexified constraints (eqs. 84-85) as a ``vmap`` of the
+    constraint linearization over masked diffs,
+  * the J consensus rounds as one ``lax.scan`` (:func:`consensus_scan`),
+  * the primal-dual alternations as a ``lax.while_loop`` with the same
+    tol-based early exit as the oracle.
+
+The Python-loop oracle this must agree with lives in ``solver/ref.py``
+(``tests/test_solver_diff.py`` enforces parity).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.solver import constraints as K
 from repro.solver import variables as V
-from repro.solver.consensus import consensus_rounds, consensus_weights
+from repro.solver.consensus import consensus_scan
 from repro.solver.objective import ObjectiveWeights, objective
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class PDHyper:
+    """Hyper-parameters of Algorithm 2 (frozen: instances key jit caches)."""
     lambda1: float = 10.0       # proximal weight (eq. 83)
     L_C: float = 10.0           # constraint Lipschitz constant (eq. 85)
     kappa: float = 0.5          # dual step (eq. 96)
@@ -38,93 +49,89 @@ class PDHyper:
     tol: float = 1e-4
 
 
-def _tree_add_scaled(w, g, scale):
-    return {k: w[k] - scale * g[k] for k in w}
+def make_surrogate(spec: V.WSpec, hyper: PDHyper, ow: ObjectiveWeights,
+                   consts_scalars, *, distributed: bool,
+                   gamma_cap: float = 20.0):
+    """Build the traceable Algorithm-2 body for static (dims, hyper, ow).
 
+    ``consts_scalars``: (L, zeta1, zeta2, F0_gap) — the scalar MLConstants
+    fields (static); the per-DPU theta_i / sigma_i arrays stay traced.
 
-def _masked_merge(base, candidates, masks):
-    """Assemble w_hat = sum_d mask_d * cand_d (+ untouched components)."""
-    out = {}
-    for kname in base:
-        acc = jnp.zeros_like(base[kname])
-        tot = jnp.zeros_like(base[kname])
-        for cand, m in zip(candidates, masks):
-            acc = acc + m[kname] * cand[kname]
-            tot = tot + m[kname]
-        out[kname] = jnp.where(tot > 0, acc / jnp.maximum(tot, 1e-12),
-                               base[kname])
-    return out
-
-
-def solve_surrogate(w_l: Dict, Lambda: np.ndarray, net, D_bar, consts,
-                    ow: ObjectiveWeights, hyper: PDHyper, masks,
-                    *, distributed: bool = True, W_cons=None,
-                    scaler: Optional[V.Scaler] = None):
-    """One full run of Algorithm 2 at SCA iterate w^l (NORMALIZED space).
-
-    Lambda: (V, nC) per-node duals (or (1, nC) for the centralized variant).
-    Returns (w_hat, Lambda_new, info)."""
-    scaler = scaler or V.Scaler(net)
-    V_nodes = len(masks)
-
-    def obj_n(wn):
-        return objective(scaler.to_phys(wn), net, D_bar, consts, ow)
-
-    def con_n(wn):
-        c = K.constraint_vector(scaler.to_phys(wn), net, D_bar)
-        return c * K.constraint_scale(net)
-
-    def project_n(wn):
-        return scaler.from_phys(V.project(scaler.to_phys(wn), net,
-                                          gamma_cap=scaler.gamma_cap))
-
-    gJ = jax.grad(obj_n)(w_l)
-    C0 = np.asarray(con_n(w_l))
-    JC = jax.jacobian(con_n)(w_l)
-    nC = C0.shape[0]
+    Returns ``fn(w_l, Lambda, net, D_bar, theta_i, sigma_i, scale_flat,
+    W_cons) -> (w_hat, Lambda', pd_iters, max_violation)`` operating on
+    NORMALIZED flat vectors; every argument is traced, so one jit of ``fn``
+    serves all re-solves at the same network dims.
+    """
+    from repro.core.convergence import MLConstants  # local: avoids cycle
+    L_s, zeta1_s, zeta2_s, f0_s = consts_scalars
     lam1, L_C, kappa = hyper.lambda1, hyper.L_C, hyper.kappa
+    nC = K.num_constraints(spec.dims)
+    cscale = K.constraint_scale(spec.dims)
+    M_own = jnp.asarray(V.ownership_matrix(spec.dims))
+    # The oracle's ctilde always spreads C0 over the FULL node count (the
+    # per-node decomposition of eq. 84), in the centralized variant too.
+    V_nodes = M_own.shape[0]
 
-    def candidate(lmb):
-        """Closed-form minimizer of node's surrogate Lagrangian (93)."""
-        lmb_j = jnp.asarray(lmb, jnp.float32)
-        denom = lam1 + L_C * jnp.sum(lmb_j)
-        g = {k: gJ[k] + jnp.tensordot(lmb_j, JC[k], axes=(0, 0))
-             for k in w_l}
-        step = {k: w_l[k] - g[k] / denom for k in w_l}
-        return project_n(step)
+    def fn(w_l, Lambda, net, D_bar, theta_i, sigma_i, scale_flat, W_cons):
+        consts = MLConstants(L=L_s, theta_i=theta_i, sigma_i=sigma_i,
+                             zeta1=zeta1_s, zeta2=zeta2_s, F0_gap=f0_s)
 
-    def ctilde(w_hat, mask):
-        """Convexified constraints at node d's block (eqs. 84-85)."""
-        diff = {k: (w_hat[k] - w_l[k]) * mask[k] for k in w_l}
-        lin = np.zeros(nC)
-        sq = 0.0
-        for k in w_l:
-            jc = np.asarray(JC[k]).reshape(nC, -1)
-            lin += jc @ np.asarray(diff[k]).reshape(-1)
-            sq += float(jnp.sum(diff[k] ** 2))
-        return C0 / V_nodes + lin + 0.5 * L_C * sq
+        def phys(x):
+            return spec.unflatten(x * scale_flat)
 
-    Lambda = np.array(Lambda, dtype=np.float64)
-    history = []
-    for it in range(hyper.max_iters):
-        if distributed:
-            cands = [candidate(Lambda[d]) for d in range(V_nodes)]
-            w_hat = project_n(_masked_merge(w_l, cands, masks))
-            new_L = np.stack([Lambda[d] + kappa * ctilde(w_hat, masks[d])
-                              for d in range(V_nodes)])
-            new_L = consensus_rounds(new_L, W_cons, hyper.consensus_rounds)
-            new_L = np.maximum(new_L, 0.0)
-        else:
-            w_hat = candidate(Lambda[0])
-            full_mask = {k: jnp.ones_like(w_l[k]) for k in w_l}
-            c_full = ctilde(w_hat, full_mask) * 1.0
-            # centralized (94): average of per-node contributions = global/V
-            new_L = np.maximum(Lambda + kappa * c_full[None] / 1.0, 0.0)
-        delta = float(np.abs(new_L - Lambda).max())
-        Lambda = new_L
-        history.append(delta)
-        if delta < hyper.tol:
-            break
-    info = {"dual_delta": history,
-            "max_violation": float(np.max(con_n(w_hat)))}
-    return w_hat, Lambda, info
+        def obj_flat(x):
+            return objective(phys(x), net, D_bar, consts, ow)
+
+        def con_flat(x):
+            return K.constraint_vector(phys(x), net, D_bar) * cscale
+
+        def proj_flat(x):
+            return spec.flatten(
+                V.project(phys(x), net, gamma_cap=gamma_cap)) / scale_flat
+
+        gJ = jax.grad(obj_flat)(w_l)
+        C0, con_lin = jax.linearize(con_flat, w_l)
+        _, con_vjp = jax.vjp(con_flat, w_l)
+
+        def candidate(lmb):
+            """Closed-form minimizer of a node's surrogate Lagrangian (93):
+            Lambda_d @ JC via one vjp — the jacobian is never built."""
+            denom = lam1 + L_C * jnp.sum(lmb)
+            g = gJ + con_vjp(lmb)[0]
+            return proj_flat(w_l - g / denom)
+
+        def pd_iteration(Lambda):
+            if distributed:
+                cands = jax.vmap(candidate)(Lambda)              # (V, P)
+                w_hat = proj_flat(jnp.einsum("vp,vp->p", M_own, cands))
+                diff = (w_hat - w_l)[None, :] * M_own            # (V, P)
+                lin = jax.vmap(con_lin)(diff)                    # (V, nC)
+                sq = 0.5 * L_C * jnp.sum(diff * diff, axis=1)
+                ctilde = C0 / V_nodes + lin + sq[:, None]        # (84)-(85)
+                new_L = Lambda + kappa * ctilde                  # (96)
+                new_L = consensus_scan(new_L, W_cons,
+                                       hyper.consensus_rounds)   # Alg. 3
+            else:
+                w_hat = candidate(Lambda[0])
+                diff = w_hat - w_l
+                ctilde = C0 / V_nodes + con_lin(diff) \
+                    + 0.5 * L_C * jnp.sum(diff * diff)
+                new_L = Lambda + kappa * ctilde[None]            # (94)
+            return w_hat, jnp.maximum(new_L, 0.0)
+
+        def cond(carry):
+            it, _, _, delta = carry
+            return (it < hyper.max_iters) & (delta >= hyper.tol)
+
+        def body(carry):
+            it, Lambda, _, _ = carry
+            w_hat, new_L = pd_iteration(Lambda)
+            delta = jnp.max(jnp.abs(new_L - Lambda))
+            return it + 1, new_L, w_hat, delta
+
+        init = (jnp.int32(0), jnp.asarray(Lambda, jnp.float32), w_l,
+                jnp.float32(jnp.inf))
+        iters, Lambda_new, w_hat, _ = jax.lax.while_loop(cond, body, init)
+        return w_hat, Lambda_new, iters, jnp.max(con_flat(w_hat))
+
+    return fn

@@ -1,0 +1,169 @@
+"""Reference (oracle) solver: the original host-side numpy / Python-loop
+implementation of Algorithms 1-3 (Sec. V).
+
+This is the pre-jit code path, kept verbatim as the differential-test oracle
+for the batched jitted backend (``sca.solve(backend="jit")`` — see
+``solver/sca.py`` and ``solver/primal_dual.py``).  It loops over nodes and
+primal-dual iterations in Python and keeps the duals in float64 numpy; the
+jit backend must agree with it on the objective (1e-4 rel.) and on the
+rounded plan (see ``tests/test_solver_diff.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solver import constraints as K
+
+if TYPE_CHECKING:   # annotation-only: keeps repro.solver import-cycle free
+    from repro.core.convergence import MLConstants
+from repro.solver import variables as V
+from repro.solver.consensus import consensus_rounds, consensus_weights
+from repro.solver.objective import (ObjectiveWeights, apply_required_deltas,
+                                    objective, objective_breakdown)
+from repro.solver.primal_dual import PDHyper
+
+
+@dataclasses.dataclass
+class SCAResult:
+    w: Dict
+    w_rounded: Dict
+    objective_history: list
+    violation_history: list
+    breakdown: dict
+    iterations: int
+
+
+def _masked_merge(base, candidates, masks):
+    """Assemble w_hat = sum_d mask_d * cand_d (+ untouched components)."""
+    out = {}
+    for kname in base:
+        acc = jnp.zeros_like(base[kname])
+        tot = jnp.zeros_like(base[kname])
+        for cand, m in zip(candidates, masks):
+            acc = acc + m[kname] * cand[kname]
+            tot = tot + m[kname]
+        out[kname] = jnp.where(tot > 0, acc / jnp.maximum(tot, 1e-12),
+                               base[kname])
+    return out
+
+
+def solve_surrogate(w_l: Dict, Lambda: np.ndarray, net, D_bar, consts,
+                    ow: ObjectiveWeights, hyper: PDHyper, masks,
+                    *, distributed: bool = True, W_cons=None,
+                    scaler: Optional[V.Scaler] = None):
+    """One full run of Algorithm 2 at SCA iterate w^l (NORMALIZED space).
+
+    Lambda: (V, nC) per-node duals (or (1, nC) for the centralized variant).
+    Returns (w_hat, Lambda_new, info)."""
+    scaler = scaler or V.Scaler(net)
+    V_nodes = len(masks)
+
+    def obj_n(wn):
+        return objective(scaler.to_phys(wn), net, D_bar, consts, ow)
+
+    def con_n(wn):
+        c = K.constraint_vector(scaler.to_phys(wn), net, D_bar)
+        return c * K.constraint_scale(net)
+
+    def project_n(wn):
+        return scaler.from_phys(V.project(scaler.to_phys(wn), net,
+                                          gamma_cap=scaler.gamma_cap))
+
+    gJ = jax.grad(obj_n)(w_l)
+    C0 = np.asarray(con_n(w_l))
+    JC = jax.jacobian(con_n)(w_l)
+    nC = C0.shape[0]
+    lam1, L_C, kappa = hyper.lambda1, hyper.L_C, hyper.kappa
+
+    def candidate(lmb):
+        """Closed-form minimizer of node's surrogate Lagrangian (93)."""
+        lmb_j = jnp.asarray(lmb, jnp.float32)
+        denom = lam1 + L_C * jnp.sum(lmb_j)
+        g = {k: gJ[k] + jnp.tensordot(lmb_j, JC[k], axes=(0, 0))
+             for k in w_l}
+        step = {k: w_l[k] - g[k] / denom for k in w_l}
+        return project_n(step)
+
+    def ctilde(w_hat, mask):
+        """Convexified constraints at node d's block (eqs. 84-85)."""
+        diff = {k: (w_hat[k] - w_l[k]) * mask[k] for k in w_l}
+        lin = np.zeros(nC)
+        sq = 0.0
+        for k in w_l:
+            jc = np.asarray(JC[k]).reshape(nC, -1)
+            lin += jc @ np.asarray(diff[k]).reshape(-1)
+            sq += float(jnp.sum(diff[k] ** 2))
+        return C0 / V_nodes + lin + 0.5 * L_C * sq
+
+    Lambda = np.array(Lambda, dtype=np.float64)
+    history = []
+    for it in range(hyper.max_iters):
+        if distributed:
+            cands = [candidate(Lambda[d]) for d in range(V_nodes)]
+            w_hat = project_n(_masked_merge(w_l, cands, masks))
+            new_L = np.stack([Lambda[d] + kappa * ctilde(w_hat, masks[d])
+                              for d in range(V_nodes)])
+            new_L = consensus_rounds(new_L, W_cons, hyper.consensus_rounds)
+            new_L = np.maximum(new_L, 0.0)
+        else:
+            w_hat = candidate(Lambda[0])
+            full_mask = {k: jnp.ones_like(w_l[k]) for k in w_l}
+            c_full = ctilde(w_hat, full_mask) * 1.0
+            # centralized (94): average of per-node contributions = global/V
+            new_L = np.maximum(Lambda + kappa * c_full[None] / 1.0, 0.0)
+        delta = float(np.abs(new_L - Lambda).max())
+        Lambda = new_L
+        history.append(delta)
+        if delta < hyper.tol:
+            break
+    info = {"dual_delta": history,
+            "max_violation": float(np.max(con_n(w_hat)))}
+    return w_hat, Lambda, info
+
+
+def solve(net, D_bar, consts: MLConstants, ow: ObjectiveWeights,
+          *, zeta: float = 0.5, max_outer: int = 20, tol: float = 1e-4,
+          pd: Optional[PDHyper] = None, distributed: bool = True,
+          w0: Optional[Dict] = None, seed: int = 0) -> SCAResult:
+    """Algorithm 1 with the Python-loop Algorithm 2 inner solver (oracle)."""
+    pd = pd or PDHyper()
+    masks = V.ownership_masks(net)
+    n_nodes = len(masks) if distributed else 1
+    W_cons = consensus_weights(net.adjacency) if distributed else None
+    from repro.network.costs import network_costs
+    scaler = V.Scaler(net)
+    Lambda = np.zeros((n_nodes, K.num_constraints(net)))
+    w_phys = V.project(w0 if w0 is not None else V.init_w(net, D_bar), net)
+    w_phys = apply_required_deltas(w_phys, net, D_bar, slack=1.05)
+    w = scaler.from_phys(w_phys)
+
+    hist, viol = [], []
+    hist.append(float(objective(w_phys, net, D_bar, consts, ow)))
+    for ell in range(max_outer):
+        w_hat, Lambda, info = solve_surrogate(
+            w, Lambda, net, D_bar, consts, ow, pd, masks,
+            distributed=distributed, W_cons=W_cons, scaler=scaler)
+        w_new = {k: w[k] + zeta * (w_hat[k] - w[k]) for k in w}
+        w_phys = apply_required_deltas(
+            V.project(scaler.to_phys(w_new), net), net, D_bar)
+        w = scaler.from_phys(w_phys)
+        obj = float(objective(w_phys, net, D_bar, consts, ow))
+        viol.append(info["max_violation"])
+        improved = hist[-1] - obj
+        hist.append(obj)
+        if 0 <= improved < tol * max(1.0, abs(hist[0])):
+            break
+    w_rounded = V.round_indicators(w_phys)
+    c = network_costs(w_rounded, net, D_bar)
+    w_rounded["delta_A"] = c["delta_A_req"]
+    w_rounded["delta_R"] = c["delta_R_req"]
+    return SCAResult(
+        w=w_phys, w_rounded=w_rounded, objective_history=hist,
+        violation_history=viol,
+        breakdown=objective_breakdown(w_rounded, net, D_bar, consts, ow),
+        iterations=ell + 1)

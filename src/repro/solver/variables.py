@@ -1,19 +1,98 @@
 """Decision-variable dict for problem P: initialization (feasible point),
 projection onto the per-node convex sets D_d (boxes / simplexes, eqs. 45-49,
-54-62, 66-68), ownership masks for the distributed solver, and rounding of
-the relaxed indicator variables.
+54-62, 66-68), ownership masks for the distributed solver, rounding of the
+relaxed indicator variables, and the flat (P,)-vector representation the
+jitted batched backend solves over (:class:`WSpec`, :func:`ownership_matrix`,
+:class:`NetView`).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Canonical key order of the decision dict w (matches core.api.PLAN_KEYS).
+W_KEYS = ("rho_nb", "rho_bs", "f_n", "z_s", "gamma", "m",
+          "I_s", "I_nb", "I_bn", "R_bs", "delta_A", "delta_R")
+
 
 def flat_dim(w):
     return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(w))
+
+
+def w_shapes(dims) -> Dict[str, tuple]:
+    """Per-key shapes of w at network dims (N, B, S)."""
+    N, B, S = dims
+    return {
+        "rho_nb": (N, B), "rho_bs": (B, S), "f_n": (N,), "z_s": (S,),
+        "gamma": (N + S,), "m": (N + S,), "I_s": (S,), "I_nb": (N, B),
+        "I_bn": (B, N), "R_bs": (B, S), "delta_A": (), "delta_R": (),
+    }
+
+
+class WSpec:
+    """Static flattening spec: w dict <-> one (P,) float32 vector.
+
+    Keyed only on the network dims, so every jitted solver function traced
+    against a spec has static shapes and re-solves across rounds (same dims,
+    fresh rates) hit the compile cache.
+    """
+
+    def __init__(self, dims):
+        self.dims = tuple(int(d) for d in dims)
+        self.shapes = w_shapes(self.dims)
+        self.sizes = {k: int(np.prod(s, dtype=np.int64))
+                      for k, s in self.shapes.items()}
+        self.offsets = {}
+        off = 0
+        for k in W_KEYS:
+            self.offsets[k] = off
+            off += self.sizes[k]
+        self.total = off
+
+    def flatten(self, w: Dict) -> jnp.ndarray:
+        return jnp.concatenate([
+            jnp.ravel(jnp.asarray(w[k], jnp.float32)) for k in W_KEYS])
+
+    def unflatten(self, flat) -> Dict:
+        return {k: flat[self.offsets[k]:self.offsets[k] + self.sizes[k]]
+                .reshape(self.shapes[k]) for k in W_KEYS}
+
+
+def owner_index(dims) -> np.ndarray:
+    """(P,) owner node id of every flat component (UEs 0..N-1, BSs N..N+B-1,
+    DCs N+B..N+B+S-1); the co-owned delta_A / delta_R entries get -1."""
+    N, B, S = dims
+    ue = np.arange(N)
+    bs = N + np.arange(B)
+    dc = N + B + np.arange(S)
+    parts = {
+        "rho_nb": np.repeat(ue, B), "rho_bs": np.repeat(bs, S),
+        "f_n": ue, "z_s": dc,
+        "gamma": np.concatenate([ue, dc]), "m": np.concatenate([ue, dc]),
+        "I_s": dc, "I_nb": np.repeat(ue, B), "I_bn": np.repeat(bs, N),
+        "R_bs": np.repeat(bs, S),
+        "delta_A": np.array([-1]), "delta_R": np.array([-1]),
+    }
+    return np.concatenate([parts[k] for k in W_KEYS])
+
+
+def ownership_matrix(dims) -> np.ndarray:
+    """(V, P) ownership-mask matrix, built with array ops (no per-node
+    loops).  Rows partition the flat w: exactly-one-owner components are
+    one-hot columns; the DC-co-owned delta entries carry weight 1/S on every
+    DC row, so ``M @ candidates`` is the Algorithm-2 masked merge."""
+    N, B, S = dims
+    Vn = N + B + S
+    own = owner_index(dims)
+    M = (own[None, :] == np.arange(Vn)[:, None]).astype(np.float32)
+    dc_rows = np.zeros(Vn, np.float32)
+    dc_rows[N + B:] = 1.0 / S
+    M[:, own < 0] = dc_rows[:, None]
+    return M
 
 
 def init_w(net, D_bar, rng=None) -> Dict:
@@ -83,46 +162,14 @@ def project(w: Dict, net, gamma_cap: float = 20.0) -> Dict:
 
 
 def ownership_masks(net) -> List[Dict]:
-    """One 0/1 mask pytree per node (UEs, then BSs, then DCs).  Shared
-    variables (I_s, delta_A, delta_R) are co-owned by the DCs (their updates
-    are averaged); every other component has exactly one owner."""
-    N, B, S = net.dims
-    masks = []
-
-    def zeros_like_w():
-        return {
-            "rho_nb": np.zeros((N, B)), "rho_bs": np.zeros((B, S)),
-            "f_n": np.zeros((N,)), "z_s": np.zeros((S,)),
-            "gamma": np.zeros((N + S,)), "m": np.zeros((N + S,)),
-            "I_s": np.zeros((S,)), "I_nb": np.zeros((N, B)),
-            "I_bn": np.zeros((B, N)), "R_bs": np.zeros((B, S)),
-            "delta_A": np.zeros(()), "delta_R": np.zeros(()),
-        }
-
-    for n in range(N):
-        m = zeros_like_w()
-        m["rho_nb"][n, :] = 1
-        m["f_n"][n] = 1
-        m["gamma"][n] = 1
-        m["m"][n] = 1
-        m["I_nb"][n, :] = 1
-        masks.append(m)
-    for b in range(B):
-        m = zeros_like_w()
-        m["rho_bs"][b, :] = 1
-        m["I_bn"][b, :] = 1
-        m["R_bs"][b, :] = 1
-        masks.append(m)
-    for s in range(S):
-        m = zeros_like_w()
-        m["z_s"][s] = 1
-        m["gamma"][N + s] = 1
-        m["m"][N + s] = 1
-        m["I_s"][s] = 1            # one simplex coordinate per DC
-        m["delta_A"] = np.ones(()) / S
-        m["delta_R"] = np.ones(()) / S
-        masks.append(m)
-    return [{k: jnp.asarray(v) for k, v in m.items()} for m in masks]
+    """One mask pytree per node (UEs, then BSs, then DCs), the dict view of
+    :func:`ownership_matrix` rows.  Shared variables (delta_A, delta_R) are
+    co-owned by the DCs (their updates are averaged); every other component
+    has exactly one owner."""
+    spec = WSpec(net.dims)
+    M = ownership_matrix(spec.dims)
+    return [{k: jnp.asarray(v) for k, v in spec.unflatten(row).items()}
+            for row in M]
 
 
 class Scaler:
@@ -150,6 +197,51 @@ class Scaler:
 
     def from_phys(self, w_phys: Dict) -> Dict:
         return {k: w_phys[k] / self.scale[k] for k in w_phys}
+
+    def flat(self, spec: "WSpec") -> jnp.ndarray:
+        """The (P,) per-component scale vector (flat-space to_phys is a
+        single elementwise multiply)."""
+        return spec.flatten({
+            k: jnp.broadcast_to(jnp.asarray(self.scale[k], jnp.float32),
+                                spec.shapes[k]) for k in W_KEYS})
+
+
+@jax.tree_util.register_pytree_node_class
+class NetView:
+    """Network view whose rate arrays are jax leaves, so jitted solver code
+    can take them as *traced* arguments: per-round rate resampling and data
+    arrivals never retrace — only the dims / cfg (static aux data) key the
+    compile cache.  Duck-types the ``Network`` surface that ``costs`` /
+    ``project`` / ``Scaler`` read (``cfg``, ``dims``, rate arrays)."""
+
+    ARRAYS = ("R_nb", "R_bn", "R_ss", "R_sb", "R_bs_max", "R_s_max")
+
+    def __init__(self, cfg, dims, arrays):
+        self.cfg = cfg
+        self._dims = tuple(int(d) for d in dims)
+        for name, arr in zip(self.ARRAYS, arrays):
+            setattr(self, name, arr)
+
+    @property
+    def dims(self):
+        return self._dims
+
+    @classmethod
+    def from_network(cls, net) -> "NetView":
+        return cls(net.cfg, net.dims,
+                   [jnp.asarray(getattr(net, a), jnp.float32)
+                    for a in cls.ARRAYS])
+
+    def tree_flatten(self):
+        leaves = tuple(getattr(self, a) for a in self.ARRAYS)
+        cfg_key = tuple(getattr(self.cfg, f.name)
+                        for f in dataclasses.fields(self.cfg))
+        return leaves, (type(self.cfg), cfg_key, self._dims)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        cfg_cls, cfg_key, dims = aux
+        return cls(cfg_cls(*cfg_key), dims, list(leaves))
 
 
 def round_indicators(w: Dict) -> Dict:

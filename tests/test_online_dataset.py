@@ -1,0 +1,69 @@
+"""Regression pins for the App. G online data dynamics (``core.drift``):
+seed-determinism of the arrival streams and the ``drift_labels`` rotation.
+"""
+import numpy as np
+
+from repro.core.drift import OnlineDataset
+
+
+def _pool(n=400, num_classes=10, seed=0):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, 4).astype(np.float32)
+    y = np.arange(n) % num_classes
+    return x, y
+
+
+def _mk(seed=3, **kw):
+    x, y = _pool()
+    kw.setdefault("mean_arrivals", 120.0)
+    kw.setdefault("std_arrivals", 12.0)
+    return OnlineDataset(features=x, labels=y,
+                         label_support=np.array([0, 2, 4, 6, 8]),
+                         seed=seed, **kw)
+
+
+def test_same_seed_identical_streams():
+    a, b = _mk(seed=5, retention=0.3), _mk(seed=5, retention=0.3)
+    for _ in range(5):
+        da, db = a.step(), b.step()
+        np.testing.assert_array_equal(np.asarray(da["x"]),
+                                      np.asarray(db["x"]))
+        np.testing.assert_array_equal(np.asarray(da["y"]),
+                                      np.asarray(db["y"]))
+
+
+def test_different_seeds_diverge():
+    a, b = _mk(seed=5), _mk(seed=6)
+    da, db = a.step(), b.step()
+    assert (len(da["y"]) != len(db["y"])
+            or not np.array_equal(np.asarray(da["x"]), np.asarray(db["x"])))
+
+
+def test_static_support_without_drift():
+    ds = _mk(seed=1, drift_labels=False)
+    for _ in range(4):
+        got = set(np.unique(np.asarray(ds.step()["y"])))
+        assert got <= {0, 2, 4, 6, 8}
+
+
+def test_drift_labels_rotates_support():
+    """With drift on, the observed label support actually moves: round r
+    shifts the support by r mod num_classes (App. G concept drift)."""
+    ds = _mk(seed=1, drift_labels=True)
+    base = {0, 2, 4, 6, 8}
+    got0 = set(np.unique(np.asarray(ds.step()["y"])))
+    assert got0 <= base                       # round 0: unshifted
+    got1 = set(np.unique(np.asarray(ds.step()["y"])))
+    assert got1 <= {(c + 1) % 10 for c in base}
+    # the rotated support really changes what the UE observes: round 1
+    # draws only odd labels, disjoint from the even round-0 support
+    assert got1 and got1.isdisjoint(got0)
+    got2 = set(np.unique(np.asarray(ds.step()["y"])))
+    assert got2 <= {(c + 2) % 10 for c in base}
+
+
+def test_retention_carries_points_forward():
+    ds = _mk(seed=9, retention=1.0)
+    n0 = len(ds.step()["y"])
+    n1 = len(ds.step()["y"])
+    assert n1 > n0  # full retention: round-1 data contains all of round-0

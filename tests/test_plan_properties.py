@@ -1,0 +1,91 @@
+"""Property-based tests (hypothesis, or the deterministic fallback shim) for
+the plan/data plumbing the solver feeds: ``RoundPlan.from_w``/``to_w``
+round-trips and ``realize_offloading`` datapoint conservation under
+arbitrary offload matrices.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+from repro.core.api import PLAN_KEYS, RoundPlan
+from repro.core.engine import realize_offloading
+from repro.network import NetworkConfig, make_network
+from repro.solver.variables import init_w, project, round_indicators
+
+_NETS = {}
+
+
+def _net(n, b, s):
+    key = (n, b, s)
+    if key not in _NETS:
+        _NETS[key] = make_network(NetworkConfig(num_ue=n, num_bs=b,
+                                                num_dc=s, seed=n + b + s))
+    return _NETS[key]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 4), st.integers(1, 3),
+       st.integers(0, 10_000))
+def test_roundplan_w_roundtrip(n, b, s, seed):
+    net = _net(n, b, s)
+    rng = np.random.RandomState(seed)
+    w = init_w(net, np.full(n, 500.0))
+    w = {k: np.asarray(v) * (1.0 + 0.5 * rng.rand(*np.shape(v)))
+         for k, v in w.items()}
+    w = round_indicators(project(w, net))
+    plan = RoundPlan.from_w(w)
+    back = plan.to_w()
+    assert set(back) == set(PLAN_KEYS)
+    for k in PLAN_KEYS:
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(w[k]),
+                                      err_msg=k)
+    # a second round-trip is the identity
+    again = RoundPlan.from_w(back).to_w()
+    for k in PLAN_KEYS:
+        np.testing.assert_array_equal(np.asarray(again[k]),
+                                      np.asarray(back[k]))
+
+
+def test_roundplan_from_w_extra_and_missing_keys():
+    net = _net(4, 2, 2)
+    w = round_indicators(project(init_w(net, np.full(4, 100.0)), net))
+    w_extra = dict(w, scratch=np.zeros(3))
+    assert RoundPlan.from_w(w_extra).aggregator == \
+        int(np.argmax(np.asarray(w["I_s"])))
+    w_missing = {k: v for k, v in w.items() if k != "rho_bs"}
+    with pytest.raises(KeyError, match="rho_bs"):
+        RoundPlan.from_w(w_missing)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(1, 3),
+       st.integers(0, 10_000), st.floats(0.0, 1.5))
+def test_realize_offloading_conserves_datapoints(n, b, s, seed, rho_scale):
+    """Every input point lands at exactly one DPU for ARBITRARY nonnegative
+    offload matrices — including rows summing past 1 (clawed back) and
+    rho_bs rows that floor every share to zero."""
+    net = _net(n, b, s)
+    rng = np.random.RandomState(seed)
+    w = {
+        "rho_nb": rho_scale * rng.rand(n, b),
+        "rho_bs": rng.rand(b, s) * rng.randint(0, 2, (b, s)),
+    }
+    sizes = rng.randint(0, 60, n)
+    data = [{"x": rng.randn(d, 3).astype(np.float32),
+             "y": rng.randint(0, 5, d)} for d in sizes]
+    ue_data, dc_data = realize_offloading(
+        np.random.RandomState(seed + 1), data, w, net)
+    n_ue = sum(len(d["y"]) for d in ue_data)
+    n_dc = sum(0 if d is None else len(d["y"]) for d in dc_data)
+    assert n_ue + n_dc == int(sizes.sum())
+    # every UE with data keeps at least one point (all-offload guard)
+    for d_in, d_out in zip(sizes, ue_data):
+        if d_in > 0:
+            assert len(d_out["y"]) >= 1
+    # label multiset is preserved end-to-end
+    all_y = np.concatenate(
+        [np.asarray(d["y"]) for d in ue_data if len(d["y"])] +
+        [np.asarray(d["y"]) for d in dc_data if d is not None])
+    in_y = np.concatenate([d["y"] for d in data if len(d["y"])]) \
+        if sizes.sum() else np.array([])
+    np.testing.assert_array_equal(np.sort(all_y), np.sort(in_y))

@@ -8,8 +8,9 @@ from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 from repro.core.convergence import MLConstants
 from repro.network import NetworkConfig, make_network
 from repro.solver import (ObjectiveWeights, PDHyper, consensus_error,
-                          consensus_rounds, consensus_weights,
-                          constraint_vector, objective, solve)
+                          consensus_rounds, consensus_scan,
+                          consensus_weights, constraint_vector, objective,
+                          solve)
 from repro.solver.greedy import (datapoint_greedy, e2e_rate, heuristic_base,
                                  rate_greedy)
 from repro.solver.variables import (Scaler, _project_simplex,
@@ -80,6 +81,46 @@ def test_scaler_roundtrip():
     for k in w:
         np.testing.assert_allclose(np.asarray(back[k]), np.asarray(w[k]),
                                    rtol=1e-6)
+
+
+def test_consensus_weights_doubly_stochastic_degenerate_graphs():
+    """Self-loops and one-directional edges in the adjacency input must not
+    break the Xiao-Boyd construction: W stays nonnegative and doubly
+    stochastic (rows AND columns sum to 1), so consensus preserves the
+    network-wide dual average."""
+    rng = np.random.RandomState(3)
+    A = (rng.rand(7, 7) < 0.4).astype(int)        # asymmetric directed draw
+    np.fill_diagonal(A, 1)                        # plus self-loops
+    W = consensus_weights(A)
+    assert W.min() >= 0.0
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-12)
+    # the average is exactly preserved by every round
+    vals = rng.randn(7, 3)
+    out = consensus_rounds(vals, W, 17)
+    np.testing.assert_allclose(out.mean(0), vals.mean(0), atol=1e-12)
+
+
+def test_consensus_error_contracts_monotonically():
+    """For a connected graph, each averaging round is a convex combination
+    per component, so consensus_error must be non-increasing round over
+    round (and strictly shrink overall)."""
+    W = consensus_weights(NET.adjacency)
+    vals = np.random.RandomState(1).randn(NET.node_count(), 5)
+    errs = [consensus_error(consensus_rounds(vals, W, j))
+            for j in range(0, 40, 2)]
+    for e_prev, e_next in zip(errs, errs[1:]):
+        assert e_next <= e_prev + 1e-12
+    assert errs[-1] < 0.5 * errs[0]
+
+
+def test_consensus_scan_matches_numpy_rounds():
+    W = consensus_weights(NET.adjacency)
+    vals = np.random.RandomState(2).randn(NET.node_count(), 4)
+    ref = consensus_rounds(vals, W, 25)
+    scanned = np.asarray(consensus_scan(
+        jnp.asarray(vals, jnp.float32), jnp.asarray(W, jnp.float32), 25))
+    np.testing.assert_allclose(scanned, ref, atol=1e-4)
 
 
 def test_consensus_converges_to_mean():

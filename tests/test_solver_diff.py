@@ -1,0 +1,135 @@
+"""Differential harness: the jitted batched solver backend vs the numpy
+Python-loop oracle (``solver/ref.py``) across a seeded grid of random
+``NetworkConfig``s, including degenerate topologies (single BS, disconnected
+server mesh, zero-data UE).
+
+Parity contract (ISSUE 3): objective within 1e-4 relative, identical
+rounded plans, and matching feasibility residuals on every grid point.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.convergence import MLConstants
+from repro.network import NetworkConfig, make_network
+from repro.solver import ObjectiveWeights, PDHyper, constraint_vector, sca
+from repro.solver.variables import NetView, WSpec, init_w, project
+
+OW = ObjectiveWeights()
+PD = PDHyper(max_iters=3, consensus_rounds=15)
+
+
+def _consts(net):
+    nd = net.cfg.num_ue + net.cfg.num_dc
+    rng = np.random.RandomState(net.cfg.seed + 7)
+    return MLConstants(L=4.0, theta_i=rng.uniform(1.0, 3.0, nd),
+                       sigma_i=rng.uniform(0.5, 1.5, nd),
+                       zeta1=2.0, zeta2=1.0)
+
+
+def _d_bar(net, zero_ue=False):
+    rng = np.random.RandomState(net.cfg.seed + 13)
+    D = rng.normal(1000.0, 100.0, net.cfg.num_ue).clip(100)
+    if zero_ue:
+        D[0] = 0.0
+    return D
+
+
+def _cut_server_mesh(net):
+    """Disconnect the DC-DC part of the consensus graph (degenerate mesh)."""
+    N, B, S = net.dims
+    A = np.array(net.adjacency)
+    A[N + B:, N + B:] = 0
+    return dataclasses.replace(net, adjacency=A)
+
+
+GRID = [
+    # (cfg, degenerate transform, zero-data UE)
+    (NetworkConfig(num_ue=6, num_bs=3, num_dc=2, seed=0), None, False),
+    (NetworkConfig(num_ue=5, num_bs=1, num_dc=2, seed=1), None, False),
+    (NetworkConfig(num_ue=8, num_bs=4, num_dc=3, seed=2), None, True),
+    (NetworkConfig(num_ue=6, num_bs=3, num_dc=3, seed=3),
+     _cut_server_mesh, False),
+]
+
+
+def _solve_both(net, D_bar, distributed):
+    consts = _consts(net)
+    kw = dict(distributed=distributed, max_outer=2, pd=PD)
+    return (sca.solve(net, D_bar, consts, OW, backend="ref", **kw),
+            sca.solve(net, D_bar, consts, OW, backend="jit", **kw))
+
+
+def _assert_parity(net, D_bar, res_ref, res_jit):
+    # objective trajectory: 1e-4 relative agreement at every outer iterate
+    ref_h = np.asarray(res_ref.objective_history)
+    jit_h = np.asarray(res_jit.objective_history)
+    assert ref_h.shape == jit_h.shape
+    np.testing.assert_allclose(jit_h, ref_h, rtol=1e-4)
+    # identical rounded plans (the executable decision)
+    for k in ("I_s", "I_nb", "I_bn"):
+        np.testing.assert_array_equal(
+            np.asarray(res_ref.w_rounded[k]), np.asarray(res_jit.w_rounded[k]),
+            err_msg=f"rounded {k} differs")
+    # continuous decisions agree tightly in physical units
+    for k in ("rho_nb", "rho_bs", "f_n", "z_s", "gamma", "m", "R_bs"):
+        a, b = np.asarray(res_ref.w[k]), np.asarray(res_jit.w[k])
+        scale = max(1.0, float(np.abs(a).max()))
+        np.testing.assert_allclose(b, a, atol=5e-3 * scale,
+                                   err_msg=f"relaxed {k} differs")
+    # feasibility residuals of the rounded plan match
+    v_ref = np.asarray(constraint_vector(res_ref.w_rounded, net, D_bar))
+    v_jit = np.asarray(constraint_vector(res_jit.w_rounded, net, D_bar))
+    scale = max(1.0, float(np.abs(v_ref).max()))
+    np.testing.assert_allclose(v_jit, v_ref, atol=1e-3 * scale)
+    np.testing.assert_allclose(res_jit.violation_history,
+                               res_ref.violation_history, atol=1e-2)
+
+
+@pytest.mark.parametrize("cfg,transform,zero_ue", GRID,
+                         ids=["base", "single_bs", "zero_data_ue",
+                              "cut_server_mesh"])
+@pytest.mark.parametrize("distributed", [False, True],
+                         ids=["centralized", "distributed"])
+def test_jit_matches_ref(cfg, transform, zero_ue, distributed):
+    net = make_network(cfg)
+    if transform is not None:
+        net = transform(net)
+    D_bar = _d_bar(net, zero_ue)
+    res_ref, res_jit = _solve_both(net, D_bar, distributed)
+    _assert_parity(net, D_bar, res_ref, res_jit)
+
+
+def test_warm_resolve_hits_compile_cache():
+    """Re-solving at the same dims with fresh rates / arrivals must NOT
+    build a new compiled step (rates are traced args, dims key the cache)."""
+    cfg = NetworkConfig(num_ue=6, num_bs=3, num_dc=2, seed=5)
+    net = make_network(cfg)
+    consts = _consts(net)
+    sca.solve(net, _d_bar(net), consts, OW, distributed=False,
+              max_outer=2, pd=PD, backend="jit")
+    n0 = sca.jit_cache_size()
+    rng = np.random.RandomState(1)
+    net2 = net.resample_rates(rng, 0.2)
+    res = sca.solve(net2, _d_bar(net) * 1.3, consts, OW, distributed=False,
+                    max_outer=2, pd=PD, backend="jit",
+                    w0=sca.solve(net, _d_bar(net), consts, OW,
+                                 distributed=False, max_outer=1, pd=PD,
+                                 backend="jit").w)
+    assert sca.jit_cache_size() == n0
+    assert len(res.objective_history) >= 2
+
+
+def test_netview_roundtrip_and_flat_spec():
+    net = make_network(NetworkConfig(num_ue=5, num_bs=2, num_dc=2, seed=4))
+    nv = NetView.from_network(net)
+    assert nv.dims == net.dims
+    np.testing.assert_allclose(np.asarray(nv.R_nb),
+                               np.asarray(net.R_nb, np.float32))
+    spec = WSpec(net.dims)
+    w = project(init_w(net, _d_bar(net)), net)
+    back = spec.unflatten(spec.flatten(w))
+    for k in w:
+        np.testing.assert_allclose(np.asarray(back[k]),
+                                   np.asarray(w[k], np.float32), rtol=1e-6)
