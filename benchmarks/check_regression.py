@@ -1,0 +1,135 @@
+"""CI bench-regression gate: compare fresh ``--smoke`` benchmark JSONs
+against the committed baselines in ``BENCH_kernels.json`` /
+``BENCH_solver.json`` (their ``smoke_baseline`` sections) and fail on
+regression.
+
+Only *machine-portable* metrics are gated — speedup ratios measured
+same-run/same-machine (plane vs tree, jit solver vs numpy oracle) — never
+absolute wall-clock, which is meaningless across CI runners.  A metric
+regresses when ``fresh < baseline / tol``; ``tol`` (default 3.0, override
+``--tol`` or ``BENCH_TOL``) absorbs runner noise while still catching the
+order-of-magnitude rots the gate exists for (e.g. the jitted solver
+silently falling back to per-call retraces, or the fused kernels losing
+to the unfused path).
+
+    PYTHONPATH=src python -m benchmarks.microbench --smoke --out out/k.json
+    PYTHONPATH=src python -m benchmarks.fig7_solver --smoke --out out/s.json
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --kernels out/k.json --solver out/s.json [--tol 3.0]
+
+Refreshing the baselines after an intentional perf change:
+
+    PYTHONPATH=src python -m benchmarks.check_regression --update \
+        --kernels out/k.json --solver out/s.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# metric -> how to read it from a smoke-run JSON
+KERNEL_METRICS = ("sim_round_speedup", "mesh_round_speedup",
+                  "solver_plan_speedup")
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def kernel_ratios(fresh: dict) -> dict:
+    res = fresh["results"]
+    return {k: float(res[k]) for k in KERNEL_METRICS if k in res}
+
+
+def solver_ratios(fresh: dict) -> dict:
+    out = {}
+    for row in fresh["results"]:
+        if row.get("speedup") is not None:
+            out[f"solver_scaling_n{row['n_ue']}_speedup"] = \
+                float(row["speedup"])
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tol: float):
+    """Return (rows, regressions): every baseline metric must exist fresh
+    and satisfy fresh >= baseline / tol."""
+    rows, regressions = [], []
+    for k, base in sorted(baseline.items()):
+        floor = base / tol
+        got = fresh.get(k)
+        ok = got is not None and got >= floor
+        rows.append((k, base, got, floor, ok))
+        if not ok:
+            regressions.append(k)
+    return rows, regressions
+
+
+def _gate(name, committed_path, fresh_path, extract, tol):
+    committed = _load(committed_path)
+    baseline = committed.get("smoke_baseline")
+    if not baseline:
+        raise SystemExit(
+            f"{committed_path} has no 'smoke_baseline' section — "
+            f"regenerate it with --update")
+    fresh = extract(_load(fresh_path))
+    rows, regressions = compare(baseline, fresh, tol)
+    print(f"== {name} (tol {tol:g}x) ==")
+    for k, base, got, floor, ok in rows:
+        got_s = "MISSING" if got is None else f"{got:8.2f}"
+        print(f"  {'ok ' if ok else 'REG'} {k:34s} baseline {base:8.2f}  "
+              f"fresh {got_s}  floor {floor:8.2f}")
+    return regressions
+
+
+def _update(committed_path, fresh_path, extract):
+    committed = _load(committed_path)
+    committed["smoke_baseline"] = extract(_load(fresh_path))
+    with open(committed_path, "w") as f:
+        json.dump(committed, f, indent=2)
+        f.write("\n")
+    print(f"[check_regression] wrote smoke_baseline -> {committed_path}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels", help="fresh microbench --smoke JSON")
+    ap.add_argument("--solver", help="fresh fig7_solver --smoke JSON")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_TOL", "3.0")))
+    ap.add_argument("--update", action="store_true",
+                    help="write the fresh ratios into the committed "
+                         "baselines instead of gating")
+    args = ap.parse_args(argv)
+    if not args.kernels and not args.solver:
+        ap.error("need --kernels and/or --solver")
+
+    pairs = []
+    if args.kernels:
+        pairs.append(("kernels", os.path.join(_ROOT, "BENCH_kernels.json"),
+                      args.kernels, kernel_ratios))
+    if args.solver:
+        pairs.append(("solver", os.path.join(_ROOT, "BENCH_solver.json"),
+                      args.solver, solver_ratios))
+
+    if args.update:
+        for _, committed, fresh, extract in pairs:
+            _update(committed, fresh, extract)
+        return 0
+
+    regressions = []
+    for name, committed, fresh, extract in pairs:
+        regressions += _gate(name, committed, fresh, extract, args.tol)
+    if regressions:
+        print(f"BENCH REGRESSION: {regressions}", file=sys.stderr)
+        return 1
+    print("bench gate: all metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.cefl_paper import ClassifierConfig
-from repro.core import MLConstants
 from repro.core.estimation import estimate_constants
 from repro.data import make_image_dataset, make_online_ues
 from repro.models.classifier import (classifier_accuracy, classifier_loss,

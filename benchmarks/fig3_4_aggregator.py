@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import QUICK, csv_line, setup
+from benchmarks.common import csv_line, setup
 from repro.core import Engine, EngineOptions
 from repro.solver.greedy import e2e_rate, subnet_datapoints
 

@@ -8,13 +8,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig3_4_aggregator, fig5_6_tradeoffs, fig7_solver,
-                            microbench, table1_2_energy_delay)
+    from benchmarks import (fig3_4_aggregator, fig3_4_dynamics,
+                            fig5_6_tradeoffs, fig7_solver, microbench,
+                            table1_2_energy_delay)
     print("name,us_per_call,derived")
     suites = [
         ("microbench", microbench.main),
         ("table1_2", table1_2_energy_delay.main),
         ("fig3_4", fig3_4_aggregator.main),
+        ("fig3_4_dynamics", fig3_4_dynamics.main),
         ("fig5_6", fig5_6_tradeoffs.main),
         ("fig7", fig7_solver.main),
     ]

@@ -44,6 +44,8 @@ class EngineOptions:
     theta: Optional[float] = None   # None -> sum_i p_i gamma_i (tau_eff),
                                     # the paper's "compensating" scaling
     strategy: str = "cefl"          # any name in available_strategies()
+    scenario: str = "static"        # environment dynamics preset (any name
+                                    # in repro.scenario.available_scenarios)
     reoptimize_every: int = 1
     solver_outer: int = 4
     distributed_solver: bool = False   # centralized is faster for sims
@@ -165,6 +167,14 @@ class RoundReport:
     m_mean: float
     plan: Optional[RoundPlan] = None
     wall_time: float = 0.0   # seconds spent in this round (train + eval)
+    # --- environment dynamics (filled by the scenario subsystem) ---
+    handovers: Tuple[Tuple[int, int, int], ...] = ()
+                             # UE-BS re-associations this round, each
+                             # (ue, old_bs, new_bs)
+    aggregator_moved: bool = False
+                             # floating aggregation point migrated vs the
+                             # previous round's plan
+    active_ues: int = -1     # UEs that contributed data (join/leave churn)
 
 
 @dataclasses.dataclass

@@ -5,7 +5,6 @@ problem P, with tau^t replaced by delta^A + delta^R (Sec. IV-1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 

@@ -11,7 +11,7 @@ arrivals ~ N(2000, 200), non-iid 5-of-10 label support per UE.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,32 @@ def fractional_loss(loss_fn: Callable, params, data: dict, D_total: int):
 def estimate_drift(loss_fn: Callable, params_probes: Sequence,
                    data_t: dict, data_tp1: dict, D_t: int, D_tp1: int,
                    tau: float) -> float:
-    """Empirical Delta_i over a set of probe models (max over probes)."""
+    """Empirical Delta_i over a set of probe models (max over probes).
+
+    The probe pytrees are stacked on a leading axis and evaluated through
+    ONE vmapped fractional-loss difference: ``loss_fn`` is traced once for
+    the whole probe set instead of once per probe (the old Python loop
+    re-traced per probe; ``_estimate_drift_loop`` keeps it as the
+    regression oracle).
+    """
+    probes = list(params_probes)
+    if not probes:
+        raise ValueError("estimate_drift needs at least one probe model")
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *probes)
+
+    def diff(p):
+        return fractional_loss(loss_fn, p, data_tp1, D_tp1) \
+            - fractional_loss(loss_fn, p, data_t, D_t)
+
+    vals = jax.vmap(diff)(stacked)
+    return float(jnp.max(vals)) / max(tau, 1e-9)
+
+
+def _estimate_drift_loop(loss_fn: Callable, params_probes: Sequence,
+                         data_t: dict, data_tp1: dict, D_t: int, D_tp1: int,
+                         tau: float) -> float:
+    """Pre-vmap per-probe loop (regression oracle for ``estimate_drift``)."""
     vals = []
     for p in params_probes:
         f1 = fractional_loss(loss_fn, p, data_tp1, D_tp1)

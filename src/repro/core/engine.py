@@ -1,7 +1,9 @@
 """The CE-FL orchestration engine: one loop, two execution backends.
 
 Each global round t (paper Secs. II+IV-VI):
-  1. UEs observe new online data (concept drift),
+  1. the pluggable :class:`~repro.scenario.Scenario` evolves the world:
+     UE mobility re-derives rates/associations, the server mesh churns,
+     and UEs observe new (possibly drifted) online data,
   2. the pluggable :class:`~repro.core.api.DecisionStrategy` picks the
      orchestration plan w^t (offloading rho, compute settings f/z/gamma/m,
      floating aggregator I_s) — warm-started from the previous plan,
@@ -39,6 +41,7 @@ from repro.core.api import (DecisionContext, EngineOptions, RoundCallback,
 from repro.core.round_step import CEFLHyper, build_cefl_round_step
 from repro.kernels.plane import as_plane, as_tree
 from repro.network.costs import network_costs, round_delay, round_energy
+from repro.scenario import get_scenario
 
 
 # ------------------------------------------------------- offloading -----
@@ -325,13 +328,17 @@ class Engine:
 
     def __init__(self, net, strategy=None, *, consts, ow,
                  opts: Optional[EngineOptions] = None,
-                 executor=None,
+                 executor=None, scenario=None,
                  callbacks: Sequence[RoundCallback] = (),
                  validate_plans: bool = True):
         self.net = net
         self.opts = opts or EngineOptions()
         self.strategy = get_strategy(
             strategy if strategy is not None else self.opts.strategy)
+        # environment dynamics: a name from the scenario registry
+        # ("static", "campus_walk", ...) or a Scenario instance
+        self.scenario = get_scenario(
+            scenario if scenario is not None else self.opts.scenario)
         self.executor = executor if executor is not None else SimExecutor()
         self.callbacks: List[RoundCallback] = list(callbacks)
         self.validate_plans = validate_plans
@@ -375,14 +382,19 @@ class Engine:
             params = as_plane(init_params)
         agg = getattr(self.strategy, "aggregation", "cefl")
         mu = opts.mu if getattr(self.strategy, "proximal", True) else 0.0
+        self.scenario.bind(self.net, opts)
         reports: List[RoundReport] = []
         cum_E = cum_D = 0.0
         plan: Optional[RoundPlan] = None
+        prev_agg: Optional[int] = None
         for t in range(opts.rounds):
             t0 = time.time()
-            data_per_ue = [ds.step() for ds in online_datasets]
+            # one scenario tick: evolved network (same cfg/dims -> the
+            # solver's NetView pytree keeps hitting its compile cache),
+            # drifted per-UE data, and the round's environment events
+            net_t, data_per_ue, events = self.scenario.step(
+                t, online_datasets, rng)
             D_bar = np.array([len(d["y"]) for d in data_per_ue], float)
-            net_t = self.net.resample_rates(rng, opts.rate_jitter)
             if plan is None or t % opts.reoptimize_every == 0:
                 plan = self.decide(net_t, D_bar, t, prev_plan=plan)
             ue_data, dc_data = realize_offloading(rng, data_per_ue, plan,
@@ -404,7 +416,12 @@ class Engine:
                 dc_points=tuple(0 if d is None else len(d["y"])
                                 for d in dc_data),
                 gamma_mean=float(gammas.mean()), m_mean=float(ms.mean()),
-                plan=plan, wall_time=time.time() - t0)
+                plan=plan, wall_time=time.time() - t0,
+                handovers=tuple(events.handovers),
+                aggregator_moved=(prev_agg is not None
+                                  and plan.aggregator != prev_agg),
+                active_ues=int(events.active_ues))
+            prev_agg = plan.aggregator
             reports.append(report)
             stop = False
             for cb in self.callbacks:

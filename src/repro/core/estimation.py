@@ -10,8 +10,7 @@ All estimates are scaled by ``safety`` (paper uses 1.5x) before use.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, List, Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -11,6 +11,7 @@ registered under the name the old ``core/cefl.py`` string dispatch used:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -38,13 +39,28 @@ class CEFLStrategy:
     def decide(self, net, D_bar, ctx: DecisionContext) -> RoundPlan:
         opts = ctx.opts
         # warm start from the previous plan: device arrays end-to-end (the
-        # jit backend flattens them straight onto the solver plane)
-        w0 = ctx.prev_plan.to_w() if ctx.prev_plan is not None else None
-        res = sca.solve(net, jnp.asarray(D_bar, jnp.float32), ctx.consts,
-                        ctx.ow, max_outer=opts.solver_outer,
+        # jit backend flattens them straight onto the solver plane).  The
+        # plan's indicators are rounded one-hots — mix them back toward
+        # the simplex interior so the relaxed SCA iterate isn't pinned at
+        # the previous vertex when the network has moved on.
+        w0 = None
+        if ctx.prev_plan is not None:
+            w0 = dict(ctx.prev_plan.to_w())
+            for k, ax in (("I_s", 0), ("I_nb", 1), ("I_bn", 0)):
+                x = jnp.asarray(w0[k], jnp.float32)
+                w0[k] = 0.5 * x + 0.5 / x.shape[ax]
+        D_j = jnp.asarray(D_bar, jnp.float32)
+        res = sca.solve(net, D_j, ctx.consts, ctx.ow,
+                        max_outer=opts.solver_outer,
                         distributed=opts.distributed_solver, w0=w0,
                         backend=opts.solver_backend)
-        return RoundPlan.from_w(res.w_rounded)
+        # floating aggregation point: exact enumeration over the rounded
+        # plan (argmax of a near-uniform relaxed I_s is noise)
+        w = dict(res.w_rounded)
+        s = sca.select_aggregator(w, net, D_j, ctx.consts, ctx.ow)
+        w["I_s"] = jax.nn.one_hot(jnp.asarray(s), w["I_s"].shape[0])
+        w = apply_required_deltas(w, net, D_j)
+        return RoundPlan.from_w(w)
 
 
 class _GreedyBase:

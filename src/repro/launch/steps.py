@@ -5,12 +5,10 @@ train.py / serve.py (real execution).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config
@@ -93,9 +91,8 @@ def make_plan(arch: str, shape_name: str, *, multi_pod: bool,
         mb = per_dpu // n_micro
         assert mb * n_micro == per_dpu
         if remat_chunk is None:
-            from repro.models.blocks import num_periods, period_spec
+            from repro.models.blocks import num_periods
             n_per = num_periods(cfg)
-            plen = len(period_spec(cfg))
             tokens_per_dev = shape.seq_len * mb // data_ax
             bytes_per_chunkless = n_per * tokens_per_dev * cfg.d_model * 2
             remat_chunk = _divisor_at_least(
@@ -228,7 +225,6 @@ def build_train_step(plan: Plan, hyper: Optional[CEFLHyper] = None):
 
 def build_prefill_step(plan: Plan, mesh=None):
     cfg, shape = plan.cfg, plan.shape
-    ctx = shard_ctx(plan, mesh) if mesh is not None else None
 
     def prefill_step(params, batch):
         logits, cache = L.prefill(params, cfg, batch["tokens"],

@@ -6,7 +6,6 @@ All softmax statistics are kept in float32 regardless of activation dtype.
 from __future__ import annotations
 
 import functools
-from functools import partial
 from typing import Optional
 
 import jax

@@ -8,8 +8,7 @@ every leaf, consumed by ``lax.scan``.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn_lib
 from repro.models import mamba as mamba_lib
 from repro.models import moe as moe_lib
-from repro.models.common import (NO_SHARD, ShardCtx, apply_rope, dense_init,
+from repro.models.common import (ShardCtx, apply_rope, dense_init,
                                  rms_norm, rope_frequencies)
 
 

@@ -7,8 +7,6 @@ logits tensor is never materialized.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,8 +15,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import blocks as B
 from repro.models import mamba as mamba_lib
-from repro.models.common import (NO_SHARD, ShardCtx, embed_init, rms_norm,
-                                 rope_frequencies, softmax_cross_entropy)
+from repro.models.common import (NO_SHARD, ShardCtx, embed_init,
+                                 rms_norm, rope_frequencies)
 
 
 # ------------------------------------------------------------------ init ---

@@ -11,7 +11,7 @@ d_conv = d_inner + 2N (the xBC channels, as in the reference implementation).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -160,7 +160,6 @@ def mamba_decode_step(params: dict, x_in: jnp.ndarray, state: dict,
     proj = x_in @ params["w_in"]
     z, xBC, dt_raw = _split_in_proj(proj, d_inner, N, H)
     # conv: append token, take last W window
-    W = params["conv_w"].shape[0]
     conv_state = state["conv"]                                   # (B,W-1,Cc)
     window = jnp.concatenate([conv_state.astype(xBC.dtype), xBC[:, None]], axis=1)
     out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]

@@ -2,5 +2,5 @@ from repro.network.costs import (  # noqa: F401
     data_configuration, network_costs, round_delay, round_energy,
 )
 from repro.network.topology import (  # noqa: F401
-    Network, NetworkConfig, make_network, shannon_rate,
+    Network, NetworkConfig, make_network, pathloss_gain, shannon_rate,
 )

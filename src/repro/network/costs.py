@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Dict
 
 import jax.numpy as jnp
-import numpy as np
 
 EPS = 1e-9
 

@@ -9,7 +9,6 @@ link rate is an i.i.d. draw from its distribution.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 
@@ -92,6 +91,16 @@ def shannon_rate(bw_hz, tx_power, gain, noise_density):
     return bw_hz * np.log2(1.0 + tx_power * gain / noise)
 
 
+def pathloss_gain(d_m):
+    """3GPP urban macro path loss 128.1 + 37.6 log10(d_km) as a linear
+    power gain.  Distances are in meters and clamped to >= 1 m; this is the
+    mean channel — multiply by a squared-Rayleigh draw for small-scale
+    fading (the eq. 12-13 channel model used by both ``make_network`` and
+    the mobility scenarios)."""
+    d_km = np.maximum(np.asarray(d_m, float), 1.0) / 1000.0
+    return 10.0 ** (-(128.1 + 37.6 * np.log10(d_km)) / 10.0)
+
+
 def make_network(cfg: NetworkConfig = NetworkConfig(),
                  edge_prob: float = 0.3) -> Network:
     """Synthetic 5G/CBRS-testbed-like network (App. F-D)."""
@@ -108,8 +117,7 @@ def make_network(cfg: NetworkConfig = NetworkConfig(),
         for b in range(B):
             same = subnet_of_ue[n] == subnet_of_bs[b]
             d = rng.uniform(50, 200) if same else rng.uniform(400, 1200)
-            gain[n, b] = 10 ** (-(128.1 + 37.6 * np.log10(d / 1000)) / 10) \
-                * rng.rayleigh(1.0) ** 2
+            gain[n, b] = pathloss_gain(d) * rng.rayleigh(1.0) ** 2
     R_nb = shannon_rate(cfg.bandwidth_hz, cfg.ue_tx_power, gain,
                         cfg.noise_density)
     R_bn = shannon_rate(cfg.bandwidth_hz, cfg.bs_tx_power, gain.T,

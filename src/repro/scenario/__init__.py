@@ -1,0 +1,15 @@
+# Dynamic-environment subsystem: per-round network + data evolution
+# (mobility, handover, mesh churn, drift schedules) behind one protocol.
+from repro.scenario import presets  # noqa: F401  (registers the built-ins)
+from repro.scenario.base import (  # noqa: F401
+    Scenario, ScenarioEvents, StaticScenario, available_scenarios,
+    get_scenario, register_scenario,
+)
+from repro.scenario.drift_schedules import (  # noqa: F401
+    ArrivalBurst, JoinLeave, LabelRotation,
+)
+from repro.scenario.dynamic import DynamicScenario  # noqa: F401
+from repro.scenario.mobility import (  # noqa: F401
+    FieldLayout, GaussMarkov, MobilityModel, RandomWaypoint,
+    layout_from_network,
+)

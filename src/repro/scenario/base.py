@@ -1,0 +1,115 @@
+"""Scenario protocol + registry: per-round evolution of the CE-FL world.
+
+The paper's environment is *dynamic* (Sec. III): users move, UE-BS
+associations change hands, server-mesh links churn, and the local data
+distributions drift — that is the regime where the floating aggregation
+point earns its keep.  A :class:`Scenario` owns exactly that evolution:
+each round it advances the network (a fresh ``Network`` with re-derived
+rates / associations, same dims+cfg so the jitted solver never retraces)
+and the data (per-UE round datasets after drift schedules), and reports
+what happened as :class:`ScenarioEvents` so ``RoundReport`` can record
+handovers and aggregation-point migrations.
+
+Scenarios are registered by name (``register_scenario`` /
+``get_scenario``), mirroring the strategy registry in ``core/api.py``:
+``Engine(net, "cefl", scenario="campus_walk")`` or
+``EngineOptions(scenario="vehicular")``.  See ``scenario/presets.py`` for
+the built-ins and docs/scenarios.md for the full story.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Protocol, Sequence, Tuple, \
+    runtime_checkable
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioEvents:
+    """What the environment did this round (consumed by ``RoundReport``)."""
+    round: int
+    handovers: Tuple[Tuple[int, int, int], ...] = ()  # (ue, old_bs, new_bs)
+    joined: Tuple[int, ...] = ()                      # UEs back online
+    left: Tuple[int, ...] = ()                        # UEs gone offline
+    mesh_down: Tuple[Tuple[int, int], ...] = ()       # DC-DC links in outage
+    active_ues: int = -1
+
+
+@runtime_checkable
+class Scenario(Protocol):
+    """Pluggable environment dynamics.
+
+    ``bind`` attaches the scenario to a base network + engine options and
+    resets all internal state (so one instance can drive repeated runs
+    deterministically); ``step`` advances one global round and returns
+    ``(net_t, data_per_ue, events)``.  ``step`` must call ``ds.step()`` on
+    every online dataset exactly once per round (datasets own their PRNG
+    streams) and draw any scenario randomness from the passed ``rng`` —
+    the engine's seeded ``RandomState`` — so a run is a pure function of
+    the seed.
+    """
+
+    def bind(self, net, opts) -> None:
+        ...
+
+    def step(self, t: int, online_datasets: Sequence, rng):
+        ...
+
+
+_SCENARIO_REGISTRY: Dict[str, Callable[..., Scenario]] = {}
+
+
+def register_scenario(name: str):
+    """Class/function decorator: ``@register_scenario("campus_walk")``.
+    The factory is called with the optional ``:``-suffix of the spec
+    string, e.g. ``"campus_walk:fast"`` -> ``factory("fast")``."""
+    if ":" in name:
+        raise ValueError(f"scenario name {name!r} must not contain ':'")
+
+    def deco(factory):
+        if name in _SCENARIO_REGISTRY:
+            raise ValueError(f"scenario {name!r} already registered")
+        _SCENARIO_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available_scenarios() -> List[str]:
+    return sorted(_SCENARIO_REGISTRY)
+
+
+def get_scenario(spec) -> Scenario:
+    """Resolve ``"name"`` / ``"name:arg"`` / a scenario instance."""
+    if not isinstance(spec, str):
+        return spec
+    name, _, arg = spec.partition(":")
+    try:
+        factory = _SCENARIO_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: "
+            f"{available_scenarios()}") from None
+    return factory(arg) if arg else factory()
+
+
+@register_scenario("static")
+class StaticScenario:
+    """The frozen pre-scenario world: per-round lognormal rate jitter
+    (``Network.resample_rates``) and untouched online datasets.  This is
+    the engine default and reproduces the legacy ``Engine.run`` behavior
+    bit-for-bit (same rng draw order)."""
+
+    def __init__(self, jitter=""):
+        self._jitter_arg = float(jitter) if jitter != "" else None
+        self._net = None
+        self._jitter = None
+
+    def bind(self, net, opts):
+        self._net = net
+        self._jitter = self._jitter_arg if self._jitter_arg is not None \
+            else getattr(opts, "rate_jitter", 0.15)
+
+    def step(self, t, online_datasets, rng):
+        data = [ds.step() for ds in online_datasets]
+        net_t = self._net.resample_rates(rng, self._jitter)
+        return net_t, data, ScenarioEvents(round=t,
+                                           active_ues=len(online_datasets))

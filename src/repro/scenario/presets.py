@@ -1,0 +1,75 @@
+"""Named scenario presets (the registry's built-ins).
+
+Mirrors the strategy presets in ``core/strategies.py``: each name maps to
+a configured :class:`~repro.scenario.dynamic.DynamicScenario` (``static``
+lives in ``scenario/base.py``).  Paper touchstones: ``campus_walk`` and
+``vehicular`` realize the Sec. III mobility-driven network evolution at
+pedestrian / vehicular timescales, ``flash_crowd`` the spatial+volume
+burst, ``label_shift`` pure concept drift (Definition 1), and ``churn``
+device availability dynamics.  docs/scenarios.md tabulates all of them.
+"""
+from __future__ import annotations
+
+from repro.scenario.base import register_scenario
+from repro.scenario.drift_schedules import (ArrivalBurst, JoinLeave,
+                                            LabelRotation)
+from repro.scenario.dynamic import DynamicScenario
+from repro.scenario.mobility import GaussMarkov, RandomWaypoint
+
+
+@register_scenario("campus_walk")
+def campus_walk(arg: str = "") -> DynamicScenario:
+    """Pedestrians on a campus: random-waypoint walking speeds, one-minute
+    rounds, light mesh churn.  ``campus_walk:fast`` doubles the motion per
+    round (shorter demo runs still see handovers)."""
+    dt = 120.0 if arg == "fast" else 60.0
+    return DynamicScenario(
+        mobility=RandomWaypoint(speed=(0.8, 2.0)),
+        area=1500.0, dt=dt, handover_margin_db=2.0,
+        mesh_outage_p=0.02, wired_jitter=0.1)
+
+
+@register_scenario("vehicular")
+def vehicular(arg: str = "") -> DynamicScenario:
+    """Vehicles on an urban grid: Gauss-Markov velocities around 18 m/s,
+    half-minute rounds (~500 m of motion each), aggressive handover,
+    noticeable mesh churn."""
+    return DynamicScenario(
+        mobility=GaussMarkov(mean_speed=18.0, alpha=0.75, sigma=5.0),
+        area=2500.0, dt=30.0, handover_margin_db=1.0,
+        mesh_outage_p=0.05, wired_jitter=0.15)
+
+
+@register_scenario("flash_crowd")
+def flash_crowd(arg: str = "") -> DynamicScenario:
+    """A crowd converges on a hotspot in rounds 5-12 while its arrival
+    volume triples: the floating aggregator has to chase the data."""
+    return DynamicScenario(
+        mobility=RandomWaypoint(speed=(1.0, 3.0), attractor=(0.82, 0.5),
+                                attract_rounds=(5, 12)),
+        schedules=(ArrivalBurst(start=5, length=7, factor=3.0),),
+        area=1500.0, dt=90.0, handover_margin_db=2.0,
+        mesh_outage_p=0.02, wired_jitter=0.1)
+
+
+@register_scenario("label_shift")
+def label_shift(arg: str = "") -> DynamicScenario:
+    """Pure concept drift: static radio plane, labels rotate one class
+    every ``period`` rounds (``label_shift:<period>``)."""
+    period = int(arg) if arg else 4
+    return DynamicScenario(
+        mobility=None,
+        schedules=(LabelRotation(period=period, shift=1),),
+        wired_jitter=0.1)
+
+
+@register_scenario("churn")
+def churn(arg: str = "") -> DynamicScenario:
+    """Device availability churn on top of slow pedestrian drift: UEs
+    leave/rejoin round to round (their data streams keep evolving while
+    offline)."""
+    return DynamicScenario(
+        mobility=RandomWaypoint(speed=(0.3, 1.0)),
+        schedules=(JoinLeave(p_leave=0.15, p_return=0.45, min_active=2),),
+        area=1500.0, dt=60.0, handover_margin_db=3.0,
+        mesh_outage_p=0.03, wired_jitter=0.1)

@@ -12,7 +12,6 @@ blocks is covered automatically.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -8,7 +8,6 @@ import dataclasses
 from typing import TYPE_CHECKING, Dict
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.network import costs as C
 

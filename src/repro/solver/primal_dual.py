@@ -65,7 +65,6 @@ def make_surrogate(spec: V.WSpec, hyper: PDHyper, ow: ObjectiveWeights,
     from repro.core.convergence import MLConstants  # local: avoids cycle
     L_s, zeta1_s, zeta2_s, f0_s = consts_scalars
     lam1, L_C, kappa = hyper.lambda1, hyper.L_C, hyper.kappa
-    nC = K.num_constraints(spec.dims)
     cscale = K.constraint_scale(spec.dims)
     M_own = jnp.asarray(V.ownership_matrix(spec.dims))
     # The oracle's ctilde always spreads C0 over the FULL node count (the

@@ -124,6 +124,26 @@ def _solve_jit(net, D_bar, consts: MLConstants, ow: ObjectiveWeights,
         iterations=ell + 1)
 
 
+def select_aggregator(w: Dict, net, D_bar, consts, ow) -> int:
+    """Exact discrete rounding of the floating-aggregator indicator I_s.
+
+    With few SCA outer iterations the relaxed I_s stays near the simplex
+    interior, so argmax rounding picks a vertex by noise rather than by
+    cost.  S is small (DC tier), so enumerate the S one-hot candidates —
+    each with its own required delay budgets — and return the index that
+    minimizes the true objective.  This is what makes the aggregation
+    point actually *float* round-to-round under dynamic scenarios.
+    """
+    S = int(np.asarray(w["I_s"]).shape[0])
+    objs = []
+    for s in range(S):
+        ws = dict(w)
+        ws["I_s"] = jax.nn.one_hot(jnp.asarray(s), S)
+        ws = apply_required_deltas(ws, net, D_bar)
+        objs.append(float(objective(ws, net, D_bar, consts, ow)))
+    return int(np.argmin(objs))
+
+
 def solve(net, D_bar, consts: MLConstants, ow: ObjectiveWeights,
           *, zeta: float = 0.5, max_outer: int = 20, tol: float = 1e-4,
           pd: Optional[PDHyper] = None, distributed: bool = True,

@@ -5,7 +5,6 @@ standard (non-FL) LM-training example path.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax

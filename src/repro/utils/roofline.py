@@ -10,7 +10,7 @@ MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for training;
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # B/s per chip

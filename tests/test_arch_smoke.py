@@ -2,11 +2,9 @@
 REDUCED variant (2 layers, d_model <= 512, <= 4 experts) — one forward +
 one CE-FL train step on CPU, asserting output shapes and no NaNs; plus a
 one-token decode step for decoder archs."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, reduced

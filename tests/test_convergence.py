@@ -1,8 +1,6 @@
 """Theorem 1 / Corollary 1 / Proposition 1 properties (hypothesis-based)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core import estimation, fedprox

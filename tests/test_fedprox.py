@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.cefl_paper import ClassifierConfig
 from repro.core import aggregation, fedprox

@@ -2,8 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.configs.base import MoEConfig
 from repro.core.drift import OnlineDataset, estimate_drift
@@ -101,6 +99,26 @@ def test_drift_estimate_positive_under_label_shift():
     delta = estimate_drift(classifier_loss, probes, d_t, d_tp1,
                            len(d_t["y"]) * 3, len(d_tp1["y"]) * 3, tau=1.0)
     assert np.isfinite(delta)
+
+
+def test_drift_estimate_vmap_matches_loop():
+    """The vmapped probe batching is a pure perf change: it must reproduce
+    the per-probe Python loop (the pre-vmap implementation) exactly."""
+    from repro.configs.cefl_paper import ClassifierConfig
+    from repro.core.drift import _estimate_drift_loop
+    (x, y), _ = make_image_dataset(1500, (8, 8, 1))
+    ds = OnlineDataset(features=x, labels=y, label_support=np.arange(4),
+                       mean_arrivals=150, std_arrivals=10, seed=3,
+                       drift_labels=True)
+    d_t, d_tp1 = ds.step(), ds.step()
+    cfg = ClassifierConfig(input_shape=(8, 8, 1), hidden=(16,))
+    probes = [init_classifier_params(jax.random.PRNGKey(i), cfg)
+              for i in range(4)]
+    args = (classifier_loss, probes, d_t, d_tp1,
+            len(d_t["y"]) * 2, len(d_tp1["y"]) * 2)
+    np.testing.assert_allclose(estimate_drift(*args, tau=0.5),
+                               _estimate_drift_loop(*args, tau=0.5),
+                               rtol=1e-5)
 
 
 def test_token_batches_layout():

@@ -2,7 +2,6 @@
 delay/energy model sanity (eqs. 12-40)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.network import (NetworkConfig, data_configuration, make_network,

@@ -1,0 +1,283 @@
+"""Scenario subsystem: registry, mobility models, network evolution
+invariants (handover / mesh churn / consensus graph), drift schedules, the
+engine threading (RoundReport dynamics fields), end-to-end seed
+determinism, and the no-retrace guarantee for per-round re-solves."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.cefl_paper import ClassifierConfig
+from repro.core import Engine, EngineOptions, MLConstants
+from repro.data import make_image_dataset, make_online_ues
+from repro.models.classifier import (classifier_accuracy, classifier_loss,
+                                     init_classifier_params)
+from repro.network import NetworkConfig, make_network
+from repro.scenario import (ArrivalBurst, DynamicScenario, GaussMarkov,
+                            JoinLeave, LabelRotation, RandomWaypoint,
+                            available_scenarios, get_scenario,
+                            layout_from_network)
+from repro.solver import ObjectiveWeights
+
+NET = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2))
+(TRX, TRY), (TEX, TEY) = make_image_dataset(2500, (8, 8, 1))
+CCFG = ClassifierConfig(input_shape=(8, 8, 1), hidden=(16,))
+P0 = init_classifier_params(jax.random.PRNGKey(0), CCFG)
+CONSTS = MLConstants(L=5.0, theta_i=np.ones(8) * 2, sigma_i=np.ones(8) * 3,
+                     zeta1=2.0, zeta2=1.0)
+OW = ObjectiveWeights()
+
+
+class _Opts:
+    rate_jitter = 0.15
+
+
+def _ues(seed=0, n=6, arrivals=120):
+    return make_online_ues(TRX, TRY, num_ue=n, mean_arrivals=arrivals,
+                           std_arrivals=arrivals / 10, seed=seed)
+
+
+def _steps(scen, rounds, seed=0, net=NET):
+    scen.bind(net, _Opts())
+    rng = np.random.RandomState(seed)
+    ues = _ues(seed)
+    return [scen.step(t, ues, rng) for t in range(rounds)]
+
+
+# ------------------------------------------------------------ registry --
+
+def test_registry_has_presets_and_args():
+    assert {"static", "campus_walk", "vehicular", "flash_crowd",
+            "label_shift", "churn"} <= set(available_scenarios())
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+    scen = get_scenario("label_shift:3")
+    assert scen.schedules[0].period == 3
+    inst = get_scenario("campus_walk")
+    assert get_scenario(inst) is inst   # instances pass through
+
+
+def test_static_scenario_matches_legacy_resample():
+    scen = get_scenario("static")
+    scen.bind(NET, _Opts())
+    rng = np.random.RandomState(7)
+    net_t, data, ev = scen.step(0, _ues(), rng)
+    ref = NET.resample_rates(np.random.RandomState(7), 0.15)
+    np.testing.assert_allclose(net_t.R_nb, ref.R_nb)
+    assert ev.handovers == () and len(data) == 6
+
+
+# ------------------------------------------------------------ mobility --
+
+def test_layout_respects_subnet_structure():
+    rng = np.random.RandomState(0)
+    lay = layout_from_network(NET, rng, area=1000.0)
+    N, B, S = NET.dims
+    assert lay.ue_pos.shape == (N, 2) and lay.bs_pos.shape == (B, 2)
+    assert (lay.ue_pos >= 0).all() and (lay.ue_pos <= 1000.0).all()
+    # each BS sits nearer its anchor DC than any other DC
+    for b in range(B):
+        d = np.linalg.norm(lay.dc_pos - lay.bs_pos[b], axis=1)
+        assert int(np.argmin(d)) == int(NET.subnet_of_bs[b])
+
+
+@pytest.mark.parametrize("model", [RandomWaypoint(speed=(1.0, 2.0)),
+                                   GaussMarkov(mean_speed=10.0)])
+def test_mobility_moves_and_stays_in_field(model):
+    rng = np.random.RandomState(0)
+    area = 500.0
+    pos = rng.uniform(0, area, (5, 2))
+    model.init(rng, pos, area)
+    total = np.zeros(5)
+    for t in range(10):
+        new = model.step(t, rng, pos, area, dt=30.0)
+        assert (new >= 0).all() and (new <= area).all()
+        total += np.linalg.norm(new - pos, axis=1)
+        pos = new
+    assert (total > 0).all()    # everyone moved
+
+
+def test_mobility_deterministic_given_rng():
+    def run():
+        rng = np.random.RandomState(3)
+        m = GaussMarkov(mean_speed=12.0)
+        pos = rng.uniform(0, 400.0, (4, 2))
+        m.init(rng, pos, 400.0)
+        for t in range(5):
+            pos = m.step(t, rng, pos, 400.0, dt=10.0)
+        return pos
+    np.testing.assert_array_equal(run(), run())
+
+
+# ----------------------------------------------------- network evolution --
+
+def test_dynamic_scenario_preserves_dims_and_cfg():
+    for net_t, _, _ in _steps(get_scenario("campus_walk"), 4):
+        assert net_t.dims == NET.dims and net_t.cfg is NET.cfg
+        assert (net_t.R_nb > 0).all() and np.isfinite(net_t.R_nb).all()
+
+
+def test_handovers_update_association_and_graph():
+    scen = get_scenario("vehicular")
+    scen.bind(NET, _Opts())
+    rng = np.random.RandomState(0)
+    ues = _ues()
+    N, B, S = NET.dims
+    total = 0
+    for t in range(12):
+        net_t, _, ev = scen.step(t, ues, rng)
+        total += len(ev.handovers)
+        # serving association drives both subnet and the consensus graph
+        serving = scen.serving_bs
+        np.testing.assert_array_equal(
+            net_t.subnet_of_ue, np.asarray(NET.subnet_of_bs)[serving])
+        A = net_t.adjacency
+        assert (A == A.T).all()
+        for n in range(N):
+            row = A[n, N:N + B]
+            assert row.sum() == 1 and row[serving[n]] == 1
+        for u, old, new in ev.handovers:
+            assert old != new and 0 <= u < N
+    assert total >= 1     # vehicular speeds must produce handovers
+
+
+def test_mesh_churn_keeps_dcs_connected():
+    """Outages must never disconnect the DC mesh — not just degree >= 1
+    (a 4-DC mesh can split into two pairs), actual single-component
+    connectivity, on a larger net where pair-splits are likely."""
+    from repro.scenario.dynamic import _components
+    net4 = make_network(NetworkConfig(num_ue=8, num_bs=4, num_dc=4))
+    scen = DynamicScenario(mobility=GaussMarkov(mean_speed=15.0),
+                           mesh_outage_p=0.6, area=1000.0, dt=10.0)
+    scen.bind(net4, _Opts())
+    rng = np.random.RandomState(0)
+    ues = _ues(n=8)
+    N, B, S = net4.dims
+    for t in range(30):
+        net_t, _, ev = scen.step(t, ues, rng)
+        A_dc = np.array(net_t.adjacency[N + B:, N + B:])
+        assert len(_components(A_dc)) == 1
+        for i, j in ev.mesh_down:
+            assert net_t.R_ss[i, j] < net4.R_ss[i, j]   # outage rate cut
+
+
+def test_static_radio_scenarios_keep_base_graph_and_rates():
+    """mobility=None presets (label_shift) must not touch associations or
+    the consensus graph — the radio plane only gets the configured
+    jitter (EngineOptions.rate_jitter threaded through bind)."""
+    scen = get_scenario("label_shift")
+
+    class O:
+        rate_jitter = 0.0
+    scen.bind(NET, O())
+    rng = np.random.RandomState(0)
+    net_t, _, ev = scen.step(0, _ues(), rng)
+    N, B, S = NET.dims
+    np.testing.assert_array_equal(net_t.adjacency[:N, N:N + B],
+                                  NET.adjacency[:N, N:N + B])
+    np.testing.assert_array_equal(net_t.subnet_of_ue, NET.subnet_of_ue)
+    np.testing.assert_allclose(net_t.R_nb, NET.R_nb)    # jitter 0.0 -> exact
+    assert ev.handovers == ()
+
+
+# ------------------------------------------------------ drift schedules --
+
+def test_label_rotation_rotates():
+    sch = LabelRotation(period=2, shift=1, num_classes=10)
+    data = {"x": np.zeros((4, 1)), "y": np.array([0, 1, 8, 9])}
+    rng = np.random.RandomState(0)
+    assert (sch.apply(0, 0, data, rng)["y"] == data["y"]).all()
+    np.testing.assert_array_equal(sch.apply(2, 0, data, rng)["y"],
+                                  np.array([1, 2, 9, 0]))
+
+
+def test_arrival_burst_scales_volume():
+    sch = ArrivalBurst(start=1, length=1, factor=3.0)
+    data = {"x": np.arange(10)[:, None], "y": np.arange(10)}
+    rng = np.random.RandomState(0)
+    assert len(sch.apply(0, 0, data, rng)["y"]) == 10    # outside window
+    assert len(sch.apply(1, 0, data, rng)["y"]) == 30
+
+
+def test_join_leave_min_active_and_events():
+    sch = JoinLeave(p_leave=1.0, p_return=0.0, min_active=2)
+    sch.reset(5)
+    rng = np.random.RandomState(0)
+    sch.begin_round(0, 5, rng)
+    joined, left = sch.events()
+    assert len(left) == 3 and not joined      # floor at min_active=2
+    data = {"x": np.zeros((4, 1)), "y": np.arange(4)}
+    gone = [len(sch.apply(0, u, data, rng)["y"]) == 0 for u in range(5)]
+    assert sum(gone) == 3
+
+
+# ----------------------------------------------- engine + determinism --
+
+def _run_engine(strategy, scenario, seed=0, rounds=5, arrivals=120):
+    ues = _ues(seed, arrivals=arrivals)
+    eng = Engine(NET, strategy, consts=CONSTS, ow=OW, scenario=scenario,
+                 opts=EngineOptions(rounds=rounds, eta=0.1, solver_outer=2,
+                                    seed=seed))
+    return eng.run(
+        ues, init_params=P0, loss_fn=classifier_loss,
+        eval_fn=lambda p: classifier_accuracy(
+            p, np.asarray(TEX[:200]), np.asarray(TEY[:200])))
+
+
+def test_engine_records_dynamics_in_reports():
+    res = _run_engine("greedy_data", "vehicular", rounds=6)
+    assert sum(len(r.handovers) for r in res.reports) >= 1
+    aggs = res.series("aggregator")
+    moved = [r.aggregator_moved for r in res.reports]
+    assert moved[0] is False
+    assert moved[1:] == [a != b for a, b in zip(aggs, aggs[1:])]
+    assert all(r.active_ues >= 1 for r in res.reports)
+
+
+def test_engine_seed_determinism_under_dynamic_scenario():
+    """Same seed => identical loss series, plans, and association traces;
+    the run is a pure function of (seed, scenario, strategy)."""
+    a = _run_engine("greedy_data", "campus_walk", seed=0, rounds=5)
+    b = _run_engine("greedy_data", "campus_walk", seed=0, rounds=5)
+    assert a.series("loss") == b.series("loss")
+    assert a.series("acc") == b.series("acc")
+    assert a.series("aggregator") == b.series("aggregator")
+    assert [r.handovers for r in a.reports] == \
+        [r.handovers for r in b.reports]
+    for ra, rb in zip(a.reports, b.reports):
+        for k, va in ra.plan.to_w().items():
+            np.testing.assert_array_equal(np.asarray(va),
+                                          np.asarray(rb.plan.to_w()[k]))
+    c = _run_engine("greedy_data", "campus_walk", seed=1, rounds=5)
+    assert a.series("loss") != c.series("loss")     # seed actually matters
+
+
+def test_churn_scenario_runs_with_empty_ues():
+    res = _run_engine("greedy_data", "churn", rounds=5)
+    assert np.isfinite(res.series("energy")).all()
+    assert min(r.active_ues for r in res.reports) >= 1
+
+
+def test_cefl_resolves_do_not_retrace_across_dynamic_rounds():
+    """The evolving Network keeps cfg/dims static, so every per-round
+    re-solve hits the jitted outer-step cache (PR-3 NetView design): the
+    cache may grow on round 0 only."""
+    from repro.solver import sca
+    _run_engine("cefl", "campus_walk", rounds=1, arrivals=80)
+    before = sca.jit_cache_size()
+    _run_engine("cefl", "campus_walk", rounds=3, arrivals=80)
+    assert sca.jit_cache_size() == before
+
+
+def test_dynamic_scenario_rebind_resets_state():
+    scen = get_scenario("campus_walk")
+    tr1 = [e.handovers for _, _, e in _steps(scen, 4, seed=0)]
+    tr2 = [e.handovers for _, _, e in _steps(scen, 4, seed=0)]
+    assert tr1 == tr2
+
+
+def test_flash_crowd_bursts_arrivals():
+    scen = get_scenario("flash_crowd")
+    sizes = [sum(len(d["y"]) for d in data)
+             for _, data, _ in _steps(scen, 8)]
+    pre, burst = np.mean(sizes[:5]), np.mean(sizes[5:])
+    assert burst > 1.8 * pre

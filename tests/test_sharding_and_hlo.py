@@ -4,7 +4,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 from jax.sharding import PartitionSpec as P

@@ -2,21 +2,18 @@
 monotonic improvement, centralized-vs-distributed agreement, rounding."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.convergence import MLConstants
 from repro.network import NetworkConfig, make_network
 from repro.solver import (ObjectiveWeights, PDHyper, consensus_error,
                           consensus_rounds, consensus_scan,
-                          consensus_weights, constraint_vector, objective,
-                          solve)
+                          consensus_weights, constraint_vector, solve)
 from repro.solver.greedy import (datapoint_greedy, e2e_rate, heuristic_base,
                                  rate_greedy)
 from repro.solver.variables import (Scaler, _project_simplex,
                                     _project_simplex_ineq, init_w,
-                                    ownership_masks, project,
-                                    round_indicators)
+                                    ownership_masks, project)
 
 NET = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2))
 D_BAR = np.full(6, 1000.0)
