@@ -14,8 +14,10 @@ to the unfused path).
 
     PYTHONPATH=src python -m benchmarks.microbench --smoke --out out/k.json
     PYTHONPATH=src python -m benchmarks.fig7_solver --smoke --out out/s.json
+    PYTHONPATH=src python -m benchmarks.sweep_bench --smoke --out out/w.json
     PYTHONPATH=src python -m benchmarks.check_regression \
-        --kernels out/k.json --solver out/s.json [--tol 3.0]
+        --kernels out/k.json --solver out/s.json --sweep out/w.json \
+        [--tol 3.0]
 
 Refreshing the baselines after an intentional perf change:
 
@@ -53,6 +55,18 @@ def solver_ratios(fresh: dict) -> dict:
             out[f"solver_scaling_n{row['n_ue']}_speedup"] = \
                 float(row["speedup"])
     return out
+
+
+# sweep gate: the vmap-vs-sequential ratio is machine-portable; the
+# rounds/sec throughput is absolute but gated under the same generous
+# tol to catch order-of-magnitude rot (a silently-sequential "vmap"
+# executor, per-round retraces) rather than runner-speed noise
+SWEEP_METRICS = ("vmap_sweep_speedup", "sweep_rounds_per_sec")
+
+
+def sweep_ratios(fresh: dict) -> dict:
+    res = fresh["results"]
+    return {k: float(res[k]) for k in SWEEP_METRICS if k in res}
 
 
 def compare(baseline: dict, fresh: dict, tol: float):
@@ -99,14 +113,15 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--kernels", help="fresh microbench --smoke JSON")
     ap.add_argument("--solver", help="fresh fig7_solver --smoke JSON")
+    ap.add_argument("--sweep", help="fresh sweep_bench --smoke JSON")
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("BENCH_TOL", "3.0")))
     ap.add_argument("--update", action="store_true",
                     help="write the fresh ratios into the committed "
                          "baselines instead of gating")
     args = ap.parse_args(argv)
-    if not args.kernels and not args.solver:
-        ap.error("need --kernels and/or --solver")
+    if not args.kernels and not args.solver and not args.sweep:
+        ap.error("need --kernels, --solver, and/or --sweep")
 
     pairs = []
     if args.kernels:
@@ -115,6 +130,9 @@ def main(argv=None):
     if args.solver:
         pairs.append(("solver", os.path.join(_ROOT, "BENCH_solver.json"),
                       args.solver, solver_ratios))
+    if args.sweep:
+        pairs.append(("sweep", os.path.join(_ROOT, "BENCH_sweep.json"),
+                      args.sweep, sweep_ratios))
 
     if args.update:
         for _, committed, fresh, extract in pairs:

@@ -1,81 +1,69 @@
-"""Shared benchmark setup: network, synthetic F-MNIST/CIFAR-like data,
-estimated ML constants, calibrated objective weights.
+"""Shared benchmark setup — now a thin view over the declarative
+experiment specs (``repro.experiments``).
 
-QUICK=1 (default) uses a scaled-down network/rounds so the whole harness
-finishes on one CPU core; QUICK=0 uses the paper's 20/10/5 topology.
+The network / synthetic data / estimated ML constants / calibrated
+objective weights all derive from the registered ``bench_quick`` /
+``bench_paper`` presets through ``experiments.build_context`` — the same
+single derivation path the spec CLI and the sweep executors use (no more
+duplicated seeding or constants-estimation code here).
+
+QUICK=1 (default) uses the scaled-down ``bench_quick`` spec so the whole
+harness finishes on one CPU core; QUICK=0 uses the paper's 20/10/5
+topology (``bench_paper``).
 """
 from __future__ import annotations
 
 import functools
 import os
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.cefl_paper import ClassifierConfig
-from repro.core.estimation import estimate_constants
-from repro.data import make_image_dataset, make_online_ues
-from repro.models.classifier import (classifier_accuracy, classifier_loss,
-                                     init_classifier_params)
-from repro.network import NetworkConfig, make_network
-from repro.solver import ObjectiveWeights
+from repro import experiments as E
 
 QUICK = os.environ.get("QUICK", "1") != "0"
 
 
+def bench_spec(dataset: str = "fmnist") -> E.ExperimentSpec:
+    """The benchmark cell spec: QUICK selects the preset, ``dataset``
+    swaps the image shape (the CIFAR-like variant)."""
+    spec = E.get_experiment("bench_quick" if QUICK else "bench_paper")
+    if dataset == "cifar":
+        shape = (16, 16, 3) if QUICK else (32, 32, 3)
+        spec = spec.override(**{"name": spec.name + "_cifar",
+                                "model.input_shape": shape})
+    return spec
+
+
 def bench_sizes():
-    if QUICK:
-        return dict(num_ue=8, num_bs=4, num_dc=3, rounds=10,
-                    mean_arrivals=400.0, img=(14, 14, 1), hidden=(64,),
-                    pool=8000)
-    return dict(num_ue=20, num_bs=10, num_dc=5, rounds=40,
-                mean_arrivals=2000.0, img=(28, 28, 1), hidden=(200, 100),
-                pool=48000)
+    spec = bench_spec()
+    return dict(num_ue=spec.network.num_ue, num_bs=spec.network.num_bs,
+                num_dc=spec.network.num_dc, rounds=spec.engine.rounds,
+                mean_arrivals=spec.data.mean_arrivals,
+                img=tuple(spec.model.input_shape),
+                hidden=tuple(spec.model.hidden), pool=spec.data.pool)
 
 
 @functools.lru_cache(maxsize=4)
 def setup(dataset: str = "fmnist", seed: int = 0):
-    sz = bench_sizes()
-    img = sz["img"] if dataset == "fmnist" else (
-        (16, 16, 3) if QUICK else (32, 32, 3))
-    net = make_network(NetworkConfig(num_ue=sz["num_ue"],
-                                     num_bs=sz["num_bs"],
-                                     num_dc=sz["num_dc"], seed=seed))
-    (trx, tr_y), (tex, te_y) = make_image_dataset(sz["pool"], img,
-                                                  seed=seed)
-    ccfg = ClassifierConfig(input_shape=img, hidden=sz["hidden"])
-    p0 = init_classifier_params(jax.random.PRNGKey(seed), ccfg)
+    """Legacy dict view of the built experiment context (the static
+    benches index it by key).  ``make_ues(drift_labels, seed_off)`` keeps
+    the old signature; seeds still flow through the spec's single
+    derivation point."""
+    spec = bench_spec(dataset)
+    if seed:
+        spec = spec.override(**{"network.topology_seed": seed,
+                                "data.pool_seed": seed, "seeds": (seed,)})
+    ctx = E.build_context(spec)
+    drift_spec = spec.override(**{"data.drift_labels": True})
 
     def make_ues(drift_labels=False, seed_off=0):
-        return make_online_ues(trx, tr_y, num_ue=sz["num_ue"],
-                               mean_arrivals=sz["mean_arrivals"],
-                               std_arrivals=sz["mean_arrivals"] / 10,
-                               seed=seed + seed_off,
-                               drift_labels=drift_labels)
+        # the drift context shares ctx's build (drift_labels is stripped
+        # from the context cache key) — only the stream flag differs
+        c = E.build_context(drift_spec) if drift_labels else ctx
+        return c.make_ues(seed + seed_off)
 
-    def eval_fn(p):
-        return classifier_accuracy(p, jnp.asarray(tex[:1000]),
-                                   jnp.asarray(te_y[:1000]))
-
-    # one-shot pre-training estimation (paper Algs. 4-6, App. H-1).
-    # Theta/sigma are estimated per-UE; DC entries (data is a mixture of
-    # offloaded UE data) take the UE means.
-    probe = [ds.step() for ds in make_ues(seed_off=99)]
-    consts = estimate_constants(classifier_loss, p0, probe,
-                                key=jax.random.PRNGKey(7),
-                                iters=3 if QUICK else 8)
-    import dataclasses as _dc
-    pad = sz["num_dc"]
-    consts = _dc.replace(
-        consts,
-        theta_i=np.concatenate([consts.theta_i,
-                                np.full(pad, consts.theta_i.mean())]),
-        sigma_i=np.concatenate([consts.sigma_i,
-                                np.full(pad, consts.sigma_i.mean())]))
-    ow = ObjectiveWeights(xi1=1.0, xi2=1e-2, xi3=2.0, T=sz["rounds"])
-    return dict(net=net, p0=p0, make_ues=make_ues, eval_fn=eval_fn,
-                loss_fn=classifier_loss, consts=consts, ow=ow, sizes=sz)
+    return dict(net=ctx.net, p0=ctx.p0, make_ues=make_ues,
+                eval_fn=ctx.eval_fn, loss_fn=ctx.loss_fn,
+                consts=ctx.consts, ow=ctx.ow, sizes=bench_sizes(),
+                spec=spec, ctx=ctx)
 
 
 def csv_line(name: str, us_per_call: float, derived):

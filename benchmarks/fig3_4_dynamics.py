@@ -2,10 +2,12 @@
 subsystem (mobility + handover + mesh churn + drift), the environments the
 static ``fig3_4_aggregator`` path cannot exercise.
 
-For each (scenario, strategy) cell: aggregation-point migrations, UE
-handovers, accuracy, and per-round energy/delay — the mobility/evolution
-story of the paper (CE-FL's floating point tracks the moving data/rate
-concentration; fixed baselines cannot).
+Each (scenario, strategy) cell is a declarative spec — the ``bench_*``
+preset with the cell's scenario/strategy overridden — executed through
+``repro.experiments.sweep`` (one spec grid, one call): aggregation-point
+migrations, UE handovers, accuracy, per-round energy/delay — the
+mobility/evolution story of the paper (CE-FL's floating point tracks the
+moving data/rate concentration; fixed baselines cannot).
 
     PYTHONPATH=src python -m benchmarks.run fig3_4_dynamics
     QUICK=0 ... for the paper-size network
@@ -14,21 +16,23 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import QUICK, csv_line, setup
-from repro.core import Engine, EngineOptions
+from benchmarks.common import QUICK, bench_spec, csv_line
+from repro import experiments as E
 
 SCENARIOS = ("campus_walk", "vehicular", "flash_crowd") if not QUICK \
     else ("campus_walk", "vehicular")
 STRATEGIES = ("cefl", "greedy_data", "fixed:0")
 
 
-def run_cell(s, scenario, strategy, rounds):
-    opts = EngineOptions(rounds=rounds, eta=0.1, solver_outer=2,
-                         reoptimize_every=1, seed=0)
-    engine = Engine(s["net"], strategy, consts=s["consts"], ow=s["ow"],
-                    opts=opts, scenario=scenario)
-    res = engine.run(s["make_ues"](), init_params=s["p0"],
-                     loss_fn=s["loss_fn"], eval_fn=s["eval_fn"])
+def cell_spec(scenario: str, strategy: str, rounds: int):
+    return bench_spec().override(**{
+        "name": f"dyn_{scenario}_{strategy.replace(':', '')}",
+        "scenario": scenario, "strategy": strategy,
+        "engine.rounds": rounds, "engine.solver_outer": 2,
+        "engine.reoptimize_every": 1, "seeds": (0,)})
+
+
+def summarize(res) -> dict:
     migrations = sum(r.aggregator_moved for r in res.reports)
     handovers = sum(len(r.handovers) for r in res.reports)
     return dict(migrations=migrations, handovers=handovers,
@@ -39,15 +43,18 @@ def run_cell(s, scenario, strategy, rounds):
 
 
 def main():
-    s = setup("fmnist")
-    rounds = min(8, s["sizes"]["rounds"])
+    rounds = min(8, bench_spec().engine.rounds)
+    specs = [cell_spec(sc, st, rounds)
+             for sc in SCENARIOS for st in STRATEGIES]
     t0 = time.time()
+    result = E.sweep(specs, executor="sequential")
+    cells = {}
     print(f"{'scenario':12s} {'strategy':12s} {'migr':>5s} {'handov':>7s} "
           f"{'acc':>6s} {'E/round':>9s} {'delay':>8s}")
-    cells = {}
     for scenario in SCENARIOS:
         for strategy in STRATEGIES:
-            c = run_cell(s, scenario, strategy, rounds)
+            name = f"dyn_{scenario}_{strategy.replace(':', '')}"
+            c = summarize(result.result(0, name))
             cells[(scenario, strategy)] = c
             print(f"{scenario:12s} {strategy:12s} {c['migrations']:5d} "
                   f"{c['handovers']:7d} {c['acc']:6.3f} "

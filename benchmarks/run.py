@@ -10,7 +10,7 @@ import traceback
 def main() -> None:
     from benchmarks import (fig3_4_aggregator, fig3_4_dynamics,
                             fig5_6_tradeoffs, fig7_solver, microbench,
-                            table1_2_energy_delay)
+                            sweep_bench, table1_2_energy_delay)
     print("name,us_per_call,derived")
     suites = [
         ("microbench", microbench.main),
@@ -19,6 +19,7 @@ def main() -> None:
         ("fig3_4_dynamics", fig3_4_dynamics.main),
         ("fig5_6", fig5_6_tradeoffs.main),
         ("fig7", fig7_solver.main),
+        ("sweep", sweep_bench.main),
     ]
     failures = []
     for name, fn in suites:

@@ -1,0 +1,121 @@
+"""Multi-seed sweep benchmark: VmapSweepExecutor vs the sequential
+fallback on the ``sweep_bench`` preset (8 seeds).
+
+Writes ``BENCH_sweep.json`` at the repo root (committed — part of the
+recorded perf trajectory) with:
+
+* ``vmap_sweep_speedup`` — sequential wall-clock / vmap wall-clock,
+  same machine, same run.  Machine-portable; the primary gated ratio.
+* ``sweep_rounds_per_sec`` — (runs x rounds) / vmap wall-clock.  The
+  acceptance throughput number; gated with the standard generous
+  tolerance since absolute throughput varies across runners.
+
+The per-seed results of the two executors are asserted identical before
+any number is reported — a speedup from diverging numerics is a bug,
+not a result.
+
+    PYTHONPATH=src python -m benchmarks.sweep_bench           # full
+    PYTHONPATH=src python -m benchmarks.sweep_bench --smoke   # CI smoke
+    ... --out bench_out/BENCH_sweep.smoke.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import csv_line
+from repro import experiments as E
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _spec(smoke: bool):
+    spec = E.get_experiment("sweep_bench")
+    if smoke:
+        spec = spec.override(**{"engine.rounds": 3,
+                                "seeds": tuple(range(4))})
+    return spec
+
+
+def _time_sweep(spec, executor: str):
+    t0 = time.time()
+    result = E.sweep(spec, executor=executor)
+    return time.time() - t0, result
+
+
+def run_bench(*, smoke: bool = False) -> dict:
+    spec = _spec(smoke)
+    # warm everything outside the timed region: the context cache keys on
+    # engine.rounds (ObjectiveWeights.T), so build THIS spec's context
+    # explicitly, then warm the jit caches (shape-keyed, rounds-agnostic)
+    # with a cheap 1-round, 2-seed sweep
+    E.build_context(spec)
+    warm = spec.override(**{"engine.rounds": 1, "seeds": spec.seeds[:2]})
+    E.sweep(warm, executor="vmap")
+    E.sweep(warm, executor="sequential")
+
+    t_seq, r_seq = _time_sweep(spec, "sequential")
+    t_vmap, r_vmap = _time_sweep(spec, "vmap")
+    # bit-exactness before any speedup claim
+    for seed in spec.run_seeds:
+        a, b = r_seq.result(seed), r_vmap.result(seed)
+        assert a.series("loss") == b.series("loss"), seed
+        assert a.series("acc") == b.series("acc"), seed
+        assert a.series("aggregator") == b.series("aggregator"), seed
+    n_rounds = len(spec.run_seeds) * spec.engine.rounds
+    results = {
+        "seeds": len(spec.run_seeds),
+        "rounds": spec.engine.rounds,
+        "sequential_s": round(t_seq, 3),
+        "vmap_s": round(t_vmap, 3),
+        "vmap_sweep_speedup": round(t_seq / t_vmap, 3),
+        "sweep_rounds_per_sec": round(n_rounds / t_vmap, 3),
+    }
+    csv_line("sweep_vmap_8seed" if not smoke else "sweep_vmap_smoke",
+             t_vmap / n_rounds * 1e6,
+             f"speedup={results['vmap_sweep_speedup']:.2f}x "
+             f"rounds_per_sec={results['sweep_rounds_per_sec']:.2f}")
+    return results
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    out_path = None
+    if "--out" in argv:
+        i = argv.index("--out")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            raise SystemExit("--out requires a path argument")
+        out_path = argv[i + 1]
+    results = run_bench(smoke=smoke)
+    out = {"bench": "sweep", "smoke": smoke,
+           "spec": _spec(smoke).name, "results": results}
+    path = os.path.join(_ROOT, "BENCH_sweep.json")
+    if not smoke:
+        # preserve the committed smoke baseline (the CI regression gate
+        # compares smoke runs against it; see benchmarks/check_regression)
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if "smoke_baseline" in prev:
+                out["smoke_baseline"] = prev["smoke_baseline"]
+        except (OSError, ValueError):
+            pass
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"[sweep_bench] wrote {path}")
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"[sweep_bench] wrote {out_path}")
+    print(json.dumps(results, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,9 @@
 """Paper Tables I & II: energy and delay to reach target accuracies —
 CE-FL vs FedNova vs FedAvg, on the F-MNIST-like and CIFAR-like synthetic
 tasks (targets re-based for the synthetic data; DESIGN.md §Assumptions).
+
+Each table row is the ``bench_*`` spec with the strategy overridden; the
+three rows run as one spec grid through ``repro.experiments.sweep``.
 """
 from __future__ import annotations
 
@@ -8,8 +11,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import QUICK, csv_line, setup
-from repro.core import Engine, EngineOptions
+from benchmarks.common import QUICK, bench_spec, csv_line
+from repro import experiments as E
 
 
 def first_reach(hist, targets):
@@ -24,21 +27,23 @@ def first_reach(hist, targets):
 
 
 def run(dataset="fmnist", targets=(0.4, 0.5, 0.6), seed=0):
-    s = setup(dataset, seed)
-    rounds = s["sizes"]["rounds"]
-    rows = {}
+    base = bench_spec(dataset)
+    if seed:
+        # pre-spec parity: a nonzero seed reseeded topology + pool too
+        base = base.override(**{"network.topology_seed": seed,
+                                "data.pool_seed": seed})
+    specs = [base.override(**{
+        "name": f"table1_{strat}", "strategy": strat,
+        "engine.solver_outer": 2 if QUICK else 4,
+        "engine.reoptimize_every": 3, "seeds": (seed,)})
+        for strat in ("cefl", "fednova", "fedavg")]
     t0 = time.time()
+    result = E.sweep(specs, executor="sequential")
+    rows = {}
     for strat in ("cefl", "fednova", "fedavg"):
-        opts = EngineOptions(rounds=rounds, eta=0.1,
-                             solver_outer=2 if QUICK else 4,
-                             reoptimize_every=3, seed=seed)
-        h = Engine(s["net"], strat, consts=s["consts"], ow=s["ow"],
-                   opts=opts).run(
-            s["make_ues"](), init_params=s["p0"], loss_fn=s["loss_fn"],
-            eval_fn=s["eval_fn"]).to_history()
+        h = result.result(seed, f"table1_{strat}").to_history()
         rows[strat] = {"hist": h, "reach": first_reach(h, targets)}
-    elapsed = time.time() - t0
-    return rows, targets, elapsed
+    return rows, targets, time.time() - t0
 
 
 def main():

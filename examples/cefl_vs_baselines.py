@@ -1,25 +1,34 @@
 """End-to-end driver: parameter estimation (Algs. 4-6) -> network-aware
-CE-FL vs FedNova vs FedAvg on the paper's full-size 20/10/5 network, with
-per-strategy accuracy / energy / delay curves (Tables I-II style), driven
-through the typed orchestration Engine (docs/orchestration.md).
+CE-FL vs FedNova vs FedAvg with per-strategy accuracy / energy / delay
+(Tables I-II style) — expressed as a declarative spec grid: one base
+spec (estimated constants included), three strategy overrides, one
+``experiments.sweep`` call.
 
   PYTHONPATH=src python examples/cefl_vs_baselines.py [--rounds 20] [--full]
 """
 import argparse
-import dataclasses
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro import experiments as E
+from repro.experiments.spec import (ConstsSpec, DataSpec, EngineSpec,
+                                    ExperimentSpec, ModelSpec, NetworkSpec)
 
-from repro.configs.cefl_paper import ClassifierConfig
-from repro.core import Engine, EngineOptions
-from repro.core.estimation import estimate_constants
-from repro.data import make_image_dataset, make_online_ues
-from repro.models.classifier import (classifier_accuracy, classifier_loss,
-                                     init_classifier_params)
-from repro.network import NetworkConfig, make_network
-from repro.solver import ObjectiveWeights
+
+def base_spec(full: bool, rounds: int) -> ExperimentSpec:
+    if full:
+        net, img, hidden, arrivals = (20, 10, 5), (28, 28, 1), \
+            (200, 100), 2000.0
+    else:
+        net, img, hidden, arrivals = (8, 4, 3), (14, 14, 1), (64,), 400.0
+    return ExperimentSpec(
+        name="cefl_vs_baselines",
+        model=ModelSpec(input_shape=img, hidden=hidden),
+        data=DataSpec(pool=20000, mean_arrivals=arrivals,
+                      std_arrivals=arrivals / 10, eval_examples=1000),
+        network=NetworkSpec(num_ue=net[0], num_bs=net[1], num_dc=net[2]),
+        consts=ConstsSpec(mode="estimate", estimate_iters=3),
+        engine=EngineSpec(rounds=rounds, eta=0.1, solver_outer=3,
+                          reoptimize_every=3),
+        strategy="cefl", scenario="static", seeds=(0,))
 
 
 def main():
@@ -30,61 +39,31 @@ def main():
                          "28x28 images")
     args = ap.parse_args()
 
-    if args.full:
-        n_ue, n_bs, n_dc, img, hidden, arrivals = 20, 10, 5, (28, 28, 1), \
-            (200, 100), 2000
-    else:
-        n_ue, n_bs, n_dc, img, hidden, arrivals = 8, 4, 3, (14, 14, 1), \
-            (64,), 400
-    net = make_network(NetworkConfig(num_ue=n_ue, num_bs=n_bs, num_dc=n_dc))
-    (trx, tr_y), (tex, te_y) = make_image_dataset(20000, img)
-    cfg = ClassifierConfig(input_shape=img, hidden=hidden)
-    p0 = init_classifier_params(jax.random.PRNGKey(0), cfg)
-
-    print("[1/3] one-shot parameter estimation (Algs. 4-6) ...")
-    probe_ues = make_online_ues(trx, tr_y, num_ue=n_ue,
-                                mean_arrivals=arrivals,
-                                std_arrivals=arrivals / 10, seed=99)
-    consts = estimate_constants(classifier_loss, p0,
-                                [ds.step() for ds in probe_ues],
-                                key=jax.random.PRNGKey(7), iters=3)
-    # Theta/sigma are estimated per UE; the solver wants one entry per DPU
-    # (N+S) — DC data is a mixture of offloaded UE data, so use UE means
-    consts = dataclasses.replace(
-        consts,
-        theta_i=np.concatenate([consts.theta_i,
-                                np.full(n_dc, consts.theta_i.mean())]),
-        sigma_i=np.concatenate([consts.sigma_i,
-                                np.full(n_dc, consts.sigma_i.mean())]))
-    print(f"    L={consts.L:.2f} zeta1={consts.zeta1:.2f} "
-          f"zeta2={consts.zeta2:.2f} Theta~{consts.theta_i.mean():.2f} "
-          f"sigma~{consts.sigma_i.mean():.2f}")
+    base = base_spec(args.full, args.rounds)
+    print("[1/3] building context (one-shot Algs. 4-6 estimation) ...")
+    ctx = E.build_context(base)
+    c = ctx.consts
+    print(f"    L={c.L:.2f} zeta1={c.zeta1:.2f} zeta2={c.zeta2:.2f} "
+          f"Theta~{c.theta_i.mean():.2f} sigma~{c.sigma_i.mean():.2f}")
 
     print("[2/3] running CE-FL and baselines ...")
-    results = {}
+    specs = [base.override(**{"name": strat, "strategy": strat})
+             for strat in ("cefl", "fednova", "fedavg")]
+    result = E.sweep(specs, executor="sequential")
+    finals = {}
     for strat in ("cefl", "fednova", "fedavg"):
-        ues = make_online_ues(trx, tr_y, num_ue=n_ue,
-                              mean_arrivals=arrivals,
-                              std_arrivals=arrivals / 10)
-        engine = Engine(
-            net, strat, consts=consts, ow=ObjectiveWeights(T=args.rounds),
-            opts=EngineOptions(rounds=args.rounds, eta=0.1,
-                               solver_outer=3, reoptimize_every=3))
-        res = engine.run(
-            ues, init_params=p0, loss_fn=classifier_loss,
-            eval_fn=lambda p: classifier_accuracy(
-                p, jnp.asarray(tex[:1000]), jnp.asarray(te_y[:1000])))
-        results[strat] = res
+        res = result.result(0, strat)
+        finals[strat] = res.final
         print(f"    {strat:8s} acc {res.final.acc:.3f}  "
               f"loss {res.final.loss:.3f}  "
               f"E {res.final.cum_energy:9.1f} J  "
               f"delay {res.final.cum_delay:8.1f} s")
 
     print("[3/3] summary (CE-FL savings vs baselines at final round):")
-    for base in ("fednova", "fedavg"):
-        e0 = results[base].final.cum_energy
-        e1 = results["cefl"].final.cum_energy
-        print(f"    energy vs {base}: {100 * (1 - e1 / e0):+.1f}%")
+    for baseline in ("fednova", "fedavg"):
+        e0 = finals[baseline].cum_energy
+        e1 = finals["cefl"].cum_energy
+        print(f"    energy vs {baseline}: {100 * (1 - e1 / e0):+.1f}%")
 
 
 if __name__ == "__main__":

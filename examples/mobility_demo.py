@@ -1,45 +1,20 @@
 """Mobility demo: watch the floating aggregation point actually float.
 
-Runs the same 20-round ``campus_walk`` scenario (random-waypoint UE
+Runs the registered ``campus_walk_vs_fixed`` spec (random-waypoint UE
 mobility -> fresh Shannon rates -> handovers -> data re-concentration)
 under the network-aware ``cefl`` strategy and under a ``fixed:0``
-baseline.  CE-FL's aggregation point migrates to chase the data/rate
-concentration while the baseline stays put; every handover and migration
-is recorded on the per-round :class:`~repro.core.api.RoundReport`.
+baseline — two cells of one declarative spec grid.  CE-FL's aggregation
+point migrates to chase the data/rate concentration while the baseline
+stays put; every handover and migration is recorded on the per-round
+:class:`~repro.core.api.RoundReport`.
 
   PYTHONPATH=src python examples/mobility_demo.py
   PYTHONPATH=src python examples/mobility_demo.py --scenario vehicular
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.cefl_paper import ClassifierConfig
-from repro.core import Engine, EngineOptions, MLConstants
-from repro.data import make_image_dataset, make_online_ues
-from repro.models.classifier import (classifier_accuracy, classifier_loss,
-                                     init_classifier_params)
-from repro.network import NetworkConfig, make_network
+from repro import experiments as E
 from repro.scenario import available_scenarios
-from repro.solver import ObjectiveWeights
-
-
-def run_one(strategy, scenario, net, data, consts, ow, rounds, seed):
-    (trx, tr_y), (tex, te_y) = data
-    ccfg = ClassifierConfig(input_shape=trx.shape[1:], hidden=(32,))
-    p0 = init_classifier_params(jax.random.PRNGKey(0), ccfg)
-    ues = make_online_ues(trx, tr_y, num_ue=net.cfg.num_ue,
-                          mean_arrivals=300, std_arrivals=30, seed=seed)
-    engine = Engine(net, strategy, consts=consts, ow=ow, scenario=scenario,
-                    opts=EngineOptions(rounds=rounds, eta=0.1,
-                                       solver_outer=2, reoptimize_every=1,
-                                       seed=seed))
-    return engine.run(
-        ues, init_params=p0, loss_fn=classifier_loss,
-        eval_fn=lambda p: classifier_accuracy(
-            p, jnp.asarray(tex[:400]), jnp.asarray(te_y[:400])))
 
 
 def main():
@@ -50,19 +25,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    net = make_network(NetworkConfig(num_ue=8, num_bs=4, num_dc=3))
-    data = make_image_dataset(6000, (14, 14, 1))
-    nd = net.cfg.num_ue + net.cfg.num_dc
-    consts = MLConstants(L=4.0, theta_i=np.full(nd, 2.0),
-                         sigma_i=np.ones(nd), zeta1=2.0, zeta2=1.0)
-    ow = ObjectiveWeights(T=args.rounds)
-
+    base = E.get_experiment("campus_walk_vs_fixed").override(**{
+        "scenario": args.scenario, "engine.rounds": args.rounds,
+        "seeds": (args.seed,)})
+    specs = [base.override(**{"name": "cefl", "strategy": "cefl"}),
+             base.override(**{"name": "fixed", "strategy": "fixed:0"})]
     results = {}
-    for strat in ("cefl", "fixed:0"):
-        print(f"== {strat} under scenario {args.scenario!r} ==")
-        res = run_one(strat, args.scenario, net, data, consts, ow,
-                      args.rounds, args.seed)
-        results[strat] = res
+    for spec in specs:
+        print(f"== {spec.strategy} under scenario {args.scenario!r} ==")
+        res = E.sweep(spec, executor="sequential").result(args.seed)
+        results[spec.name] = res
         print("round | agg DC | moved | handovers           | active UEs")
         for r in res.reports:
             ho = " ".join(f"{u}:{a}->{b}" for u, a, b in r.handovers)
@@ -71,7 +43,7 @@ def main():
                   f"{ho:19s} | {r.active_ues}")
         print()
 
-    cefl, fixed = results["cefl"], results["fixed:0"]
+    cefl, fixed = results["cefl"], results["fixed"]
     migrations = sum(r.aggregator_moved for r in cefl.reports)
     handovers = sum(len(r.handovers) for r in cefl.reports)
     print(f"cefl:    {migrations} aggregation-point migrations, "

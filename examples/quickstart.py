@@ -1,49 +1,32 @@
 """Quickstart: CE-FL on a synthetic edge network in ~a minute on CPU.
 
-Builds a 6-UE / 3-BS / 2-DC network, streams non-iid online data to the UEs,
-lets the network-aware solver pick offloading + the floating aggregation DC
-each round, and trains the paper's image classifier cooperatively at UEs+DCs
-— all through the typed orchestration Engine (see docs/orchestration.md).
+One declarative spec — the registered ``quickstart`` preset — builds the
+6-UE / 3-BS / 2-DC network, streams non-iid online data to the UEs, lets
+the network-aware solver pick offloading + the floating aggregation DC
+each round, and trains the paper's image classifier cooperatively at
+UEs+DCs (docs/experiments.md).  Equivalent CLI:
+
+  PYTHONPATH=src python -m repro.experiments run quickstart
+
+This script is the library-API version of the same run:
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.cefl_paper import ClassifierConfig
-from repro.core import Engine, EngineOptions, MLConstants
-from repro.data import make_image_dataset, make_online_ues
-from repro.models.classifier import (classifier_accuracy, classifier_loss,
-                                     init_classifier_params)
-from repro.network import NetworkConfig, make_network
-from repro.solver import ObjectiveWeights
+from repro import experiments
 
 
 def main():
-    net = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2))
-    (trx, tr_y), (tex, te_y) = make_image_dataset(6000, (14, 14, 1))
-    ues = make_online_ues(trx, tr_y, num_ue=6, mean_arrivals=300,
-                          std_arrivals=30)
-    cfg = ClassifierConfig(input_shape=(14, 14, 1), hidden=(64,))
-    p0 = init_classifier_params(jax.random.PRNGKey(0), cfg)
-    consts = MLConstants(L=5.0, theta_i=np.ones(8) * 2.0,
-                         sigma_i=np.ones(8) * 3.0, zeta1=2.0, zeta2=1.0)
-
-    engine = Engine(net, "cefl", consts=consts, ow=ObjectiveWeights(),
-                    opts=EngineOptions(rounds=8, eta=0.1, solver_outer=2,
-                                       reoptimize_every=4))
-
+    spec = experiments.get_experiment("quickstart")
+    print(f"spec: {spec.name} — {spec.network.num_ue} UEs / "
+          f"{spec.network.num_bs} BSs / {spec.network.num_dc} DCs, "
+          f"strategy={spec.strategy}, {spec.engine.rounds} rounds")
     print("\nround  acc    loss   aggregator  energy(J)  delay(s)")
 
-    @engine.on_round_end
     def show(r):
         print(f"{r.round:5d}  {r.acc:.3f}  {r.loss:.3f}  "
               f"DC{r.aggregator:<9d} {r.energy:9.2f} {r.delay:9.2f}")
 
-    result = engine.run(ues, init_params=p0, loss_fn=classifier_loss,
-                        eval_fn=lambda p: classifier_accuracy(
-                            p, jnp.asarray(tex[:500]), jnp.asarray(te_y[:500])))
+    result = experiments.run(spec, callbacks=(show,))
 
     final = result.final
     print(f"\nfinal accuracy {final.acc:.3f}; "

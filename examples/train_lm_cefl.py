@@ -1,14 +1,17 @@
-"""Train an LM with the mesh-native CE-FL round (thin wrapper over the
-launcher, which drives the engine's MeshExecutor round step).  With no
-flags this trains the reduced mamba2 smoke model; the full 130M run is the
+"""Train an LM with the mesh-native CE-FL round — the ``lm_smoke`` /
+``lm_mamba2_130m`` presets run through the spec API.  With no flags this
+trains the reduced mamba2 smoke model; the full 130M run is the
 assignment's "~100M model for a few hundred steps":
 
   PYTHONPATH=src python examples/train_lm_cefl.py                  # smoke
   PYTHONPATH=src python examples/train_lm_cefl.py --full           # 130M
+
+Equivalent CLI:  PYTHONPATH=src python -m repro.experiments run lm_smoke
 """
 import argparse
 
-from repro.launch.train import main as train_main
+from repro.experiments import get_experiment
+from repro.experiments.lm import run_lm
 
 
 def main():
@@ -19,15 +22,14 @@ def main():
     ap.add_argument("--steps", type=int, default=None)
     args = ap.parse_args()
     if args.full:
-        argv = ["--arch", "mamba2-130m", "--steps",
-                str(args.steps or 200), "--batch", "8", "--seq", "512",
-                "--n-dpu", "2", "--gamma", "2",
-                "--checkpoint", "results/ckpt_mamba2_cefl"]
+        spec = get_experiment("lm_mamba2_130m")
+        if args.steps:
+            spec = spec.override(**{"engine.rounds": args.steps})
+        run_lm(spec, checkpoint="results/ckpt_mamba2_cefl")
     else:
-        argv = ["--arch", "mamba2-130m", "--reduced", "--steps",
-                str(args.steps or 30), "--batch", "8", "--seq", "256",
-                "--n-dpu", "2", "--gamma", "2"]
-    train_main(argv)
+        spec = get_experiment("lm_smoke").override(
+            **{"engine.rounds": args.steps or 30, "model.gamma": 2})
+        run_lm(spec)
 
 
 if __name__ == "__main__":

@@ -55,6 +55,10 @@ class EngineOptions:
     m_default: float = 0.5
     rate_jitter: float = 0.15
     seed: int = 0
+    eval_every: int = 1             # eval cadence: eval_fn runs on rounds
+                                    # t % eval_every == 0 and the last
+                                    # round; off-cadence rounds carry the
+                                    # last measured accuracy forward
 
 
 @dataclasses.dataclass(frozen=True)

@@ -39,7 +39,7 @@ from repro.core.api import (DecisionContext, EngineOptions, RoundCallback,
                             RoundPlan, RoundReport, RunResult, get_strategy,
                             weighted_mean)
 from repro.core.round_step import CEFLHyper, build_cefl_round_step
-from repro.kernels.plane import as_plane, as_tree
+from repro.kernels.plane import ParamPlane, as_plane, as_tree
 from repro.network.costs import network_costs, round_delay, round_energy
 from repro.scenario import get_scenario
 
@@ -316,6 +316,96 @@ class MeshExecutor:
 
 # ----------------------------------------------------------- engine -----
 
+def _rng_state_dict(rng: np.random.RandomState) -> dict:
+    """A numpy ``RandomState`` state as array/scalar leaves (MT19937)."""
+    kind, keys, pos, has_gauss, cached = rng.get_state()
+    assert kind == "MT19937", kind
+    return {"keys": np.asarray(keys), "pos": int(pos),
+            "has_gauss": int(has_gauss), "cached": float(cached)}
+
+
+def _rng_from_state_dict(d: dict) -> np.random.RandomState:
+    rng = np.random.RandomState()
+    rng.set_state(("MT19937", np.asarray(d["keys"], np.uint32),
+                   int(d["pos"]), int(d["has_gauss"]), float(d["cached"])))
+    return rng
+
+
+@dataclasses.dataclass
+class LoopState:
+    """The full mutable state of one orchestration run between rounds.
+
+    Everything the loop reads or writes lives here (the engine itself
+    stays stateless across rounds), so a run can be advanced one round at
+    a time (:meth:`Engine.begin_round` / :meth:`Engine.finish_round`),
+    checkpointed mid-run (:meth:`state_dict`), and resumed bit-exactly.
+    ``loss_fn`` / ``eval_fn`` are behavior, not state — they are rebound
+    by the caller on resume and excluded from :meth:`state_dict`.
+    """
+    rng: np.random.RandomState
+    key: jax.Array
+    params: object
+    loss_fn: object = None
+    eval_fn: object = None
+    reports: List[RoundReport] = dataclasses.field(default_factory=list)
+    cum_E: float = 0.0
+    cum_D: float = 0.0
+    plan: Optional[RoundPlan] = None
+    prev_agg: Optional[int] = None
+    t: int = 0
+    stopped: bool = False
+    last_acc: float = float("nan")
+
+    def state_dict(self) -> dict:
+        """Array/scalar leaves of the loop state (reports excluded — the
+        metric trace serializes as JSON-able records at the experiments
+        layer, see ``repro.experiments.runstate``)."""
+        plane = as_plane(self.params)
+        plan = {} if self.plan is None else \
+            {k: np.asarray(v) for k, v in self.plan.to_w().items()}
+        return {
+            "t": int(self.t),
+            "cum_E": float(self.cum_E), "cum_D": float(self.cum_D),
+            "prev_agg": -1 if self.prev_agg is None else int(self.prev_agg),
+            "last_acc": float(self.last_acc),
+            "stopped": int(self.stopped),
+            "rng": _rng_state_dict(self.rng),
+            "key": np.asarray(self.key),
+            "params_plane": np.asarray(plane.data),
+            "plan": plan,
+        }
+
+    def load_state_dict(self, d: dict, *, use_plane: bool) -> None:
+        self.t = int(d["t"])
+        self.cum_E = float(d["cum_E"])
+        self.cum_D = float(d["cum_D"])
+        self.prev_agg = None if int(d["prev_agg"]) < 0 else \
+            int(d["prev_agg"])
+        self.last_acc = float(d["last_acc"])
+        self.stopped = bool(int(d["stopped"]))
+        self.rng = _rng_from_state_dict(d["rng"])
+        self.key = jnp.asarray(np.asarray(d["key"], np.uint32))
+        spec = as_plane(self.params).spec
+        plane = ParamPlane(data=jnp.asarray(d["params_plane"]), spec=spec)
+        self.params = plane if use_plane else plane.to_tree()
+        self.plan = RoundPlan.from_w(d["plan"]) if d["plan"] else None
+
+
+@dataclasses.dataclass
+class StagedRound:
+    """Host-side output of :meth:`Engine.begin_round`: everything the
+    executor needs to run the device work of round ``t``."""
+    t: int
+    net_t: object
+    D_bar: np.ndarray
+    plan: RoundPlan
+    datasets: list                 # ue_data + dc_data, one entry per DPU
+    n_dc: int
+    key: jax.Array
+    events: object
+    t0: float
+
+
 class Engine:
     """Drives the CE-FL loop with a pluggable strategy and executor.
 
@@ -363,6 +453,107 @@ class Engine:
             plan.validate(net_t)
         return plan
 
+    # --- the round loop, exposed one round at a time -------------------
+    #
+    # init_loop / begin_round / finish_round are the resumable form of
+    # the loop: Engine.run is literally init + while + (begin, execute,
+    # finish), and the multi-seed sweep executors in repro.experiments
+    # drive K LoopStates through the same three calls in lockstep so the
+    # per-seed host work (scenario tick, solver decision, offloading,
+    # PRNG chains) stays bit-identical to a solo Engine.run.
+
+    @property
+    def aggregation(self) -> str:
+        return getattr(self.strategy, "aggregation", "cefl")
+
+    @property
+    def mu_effective(self) -> float:
+        return self.opts.mu if getattr(self.strategy, "proximal", True) \
+            else 0.0
+
+    def init_loop(self, online_datasets, *, init_params, loss_fn=None,
+                  eval_fn=None) -> LoopState:
+        """Bind the scenario and build the round-0 loop state."""
+        del online_datasets  # streams carry their own state; staged later
+        opts = self.opts
+        params = init_params
+        if getattr(self.executor, "use_plane", False):
+            # plane-backed executors keep params flat across rounds;
+            # tree views are materialized only at API boundaries (eval,
+            # RoundReport, the final RunResult)
+            params = as_plane(init_params)
+        self.scenario.bind(self.net, opts)
+        return LoopState(rng=np.random.RandomState(opts.seed),
+                         key=jax.random.PRNGKey(opts.seed),
+                         params=params, loss_fn=loss_fn, eval_fn=eval_fn)
+
+    def begin_round(self, state: LoopState, online_datasets) -> StagedRound:
+        """Host side of round ``state.t``: scenario tick, plan decision,
+        offloading realization, PRNG advance.  Mutates ``state`` (rng,
+        key, plan) exactly as the solo loop does."""
+        opts = self.opts
+        t = state.t
+        t0 = time.time()
+        # one scenario tick: evolved network (same cfg/dims -> the
+        # solver's NetView pytree keeps hitting its compile cache),
+        # drifted per-UE data, and the round's environment events
+        net_t, data_per_ue, events = self.scenario.step(
+            t, online_datasets, state.rng)
+        D_bar = np.array([len(d["y"]) for d in data_per_ue], float)
+        if state.plan is None or t % opts.reoptimize_every == 0:
+            state.plan = self.decide(net_t, D_bar, t, prev_plan=state.plan)
+        ue_data, dc_data = realize_offloading(state.rng, data_per_ue,
+                                              state.plan, net_t)
+        state.key, sub = jax.random.split(state.key)
+        return StagedRound(t=t, net_t=net_t, D_bar=D_bar, plan=state.plan,
+                           datasets=ue_data + dc_data, n_dc=len(dc_data),
+                           key=sub, events=events, t0=t0)
+
+    def should_eval(self, t: int) -> bool:
+        every = max(1, getattr(self.opts, "eval_every", 1))
+        return t % every == 0 or t == self.opts.rounds - 1
+
+    def finish_round(self, state: LoopState, staged: StagedRound,
+                     mean_loss: float, acc: Optional[float] = None) -> \
+            RoundReport:
+        """Account the finished round: costs, eval (per the cadence, or
+        the precomputed ``acc`` a sweep executor hands in), report,
+        callbacks.  Advances ``state.t``."""
+        plan = staged.plan
+        costs = network_costs(plan.to_w(), staged.net_t, staged.D_bar)
+        E = float(round_energy(costs, self.ow.xi3_sub))
+        Dl = float(round_delay(costs))
+        state.cum_E += E
+        state.cum_D += Dl
+        if acc is None:
+            if self.should_eval(staged.t):
+                acc = float(state.eval_fn(as_tree(state.params)))
+            else:
+                acc = state.last_acc
+        state.last_acc = float(acc)
+        gammas, ms = _plan_settings(plan)
+        dc_data = staged.datasets[len(staged.datasets) - staged.n_dc:]
+        report = RoundReport(
+            round=staged.t, acc=float(acc), loss=mean_loss,
+            energy=E, delay=Dl, cum_energy=state.cum_E,
+            cum_delay=state.cum_D,
+            aggregator=plan.aggregator,
+            dc_points=tuple(0 if d is None else len(d["y"])
+                            for d in dc_data),
+            gamma_mean=float(gammas.mean()), m_mean=float(ms.mean()),
+            plan=plan, wall_time=time.time() - staged.t0,
+            handovers=tuple(staged.events.handovers),
+            aggregator_moved=(state.prev_agg is not None
+                              and plan.aggregator != state.prev_agg),
+            active_ues=int(staged.events.active_ues))
+        state.prev_agg = plan.aggregator
+        state.reports.append(report)
+        for cb in self.callbacks:
+            if cb(report) is True:
+                state.stopped = True
+        state.t += 1
+        return report
+
     def run(self, online_datasets, *, init_params, loss_fn,
             eval_fn) -> RunResult:
         """Run the full orchestration loop.
@@ -371,61 +562,19 @@ class Engine:
         ``loss_fn(params, batch, example_weights) -> scalar``;
         ``eval_fn(params) -> accuracy``.
         """
-        opts = self.opts
-        rng = np.random.RandomState(opts.seed)
-        key = jax.random.PRNGKey(opts.seed)
-        params = init_params
-        if getattr(self.executor, "use_plane", False):
-            # plane-backed executors keep params flat across rounds;
-            # tree views are materialized only at API boundaries (eval,
-            # RoundReport, the final RunResult)
-            params = as_plane(init_params)
-        agg = getattr(self.strategy, "aggregation", "cefl")
-        mu = opts.mu if getattr(self.strategy, "proximal", True) else 0.0
-        self.scenario.bind(self.net, opts)
-        reports: List[RoundReport] = []
-        cum_E = cum_D = 0.0
-        plan: Optional[RoundPlan] = None
-        prev_agg: Optional[int] = None
-        for t in range(opts.rounds):
-            t0 = time.time()
-            # one scenario tick: evolved network (same cfg/dims -> the
-            # solver's NetView pytree keeps hitting its compile cache),
-            # drifted per-UE data, and the round's environment events
-            net_t, data_per_ue, events = self.scenario.step(
-                t, online_datasets, rng)
-            D_bar = np.array([len(d["y"]) for d in data_per_ue], float)
-            if plan is None or t % opts.reoptimize_every == 0:
-                plan = self.decide(net_t, D_bar, t, prev_plan=plan)
-            ue_data, dc_data = realize_offloading(rng, data_per_ue, plan,
-                                                  net_t)
-            key, sub = jax.random.split(key)
-            params, mean_loss = self.executor.run_round(
-                params, plan, ue_data + dc_data, loss_fn=loss_fn,
-                eta=opts.eta, mu=mu, theta=opts.theta, agg=agg, key=sub)
-            costs = network_costs(plan.to_w(), net_t, D_bar)
-            E = float(round_energy(costs, self.ow.xi3_sub))
-            Dl = float(round_delay(costs))
-            cum_E += E
-            cum_D += Dl
-            gammas, ms = _plan_settings(plan)
-            report = RoundReport(
-                round=t, acc=float(eval_fn(as_tree(params))), loss=mean_loss,
-                energy=E, delay=Dl, cum_energy=cum_E, cum_delay=cum_D,
-                aggregator=plan.aggregator,
-                dc_points=tuple(0 if d is None else len(d["y"])
-                                for d in dc_data),
-                gamma_mean=float(gammas.mean()), m_mean=float(ms.mean()),
-                plan=plan, wall_time=time.time() - t0,
-                handovers=tuple(events.handovers),
-                aggregator_moved=(prev_agg is not None
-                                  and plan.aggregator != prev_agg),
-                active_ues=int(events.active_ues))
-            prev_agg = plan.aggregator
-            reports.append(report)
-            stop = False
-            for cb in self.callbacks:
-                stop = (cb(report) is True) or stop
-            if stop:
-                break
-        return RunResult(reports=reports, params=as_tree(params))
+        state = self.init_loop(online_datasets, init_params=init_params,
+                               loss_fn=loss_fn, eval_fn=eval_fn)
+        return self.run_loop(state, online_datasets)
+
+    def run_loop(self, state: LoopState, online_datasets) -> RunResult:
+        """Drive an (initialized or resumed) LoopState to completion."""
+        while state.t < self.opts.rounds and not state.stopped:
+            staged = self.begin_round(state, online_datasets)
+            state.params, mean_loss = self.executor.run_round(
+                state.params, staged.plan, staged.datasets,
+                loss_fn=state.loss_fn, eta=self.opts.eta,
+                mu=self.mu_effective, theta=self.opts.theta,
+                agg=self.aggregation, key=staged.key)
+            self.finish_round(state, staged, mean_loss)
+        return RunResult(reports=state.reports,
+                         params=as_tree(state.params))

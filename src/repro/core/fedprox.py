@@ -89,13 +89,19 @@ def _bucket(n: int) -> int:
 _PLANE_TRAIN_CACHE = {}
 
 
-def _plane_train_fn(loss_fn, spec):
+def _plane_train_fn(loss_fn, spec, batched_anchor: bool = False):
     """ONE jitted function running the full gamma-step local-training loop
     of a DPU group on parameter planes.  The tree view needed by
     ``loss_fn`` is a compile-time slice/reshape of the plane inside the
     traced graph (its transpose re-flattens the gradient) — there is no
-    host-level flatten/unflatten anywhere in the loop."""
-    key = (loss_fn, spec)
+    host-level flatten/unflatten anywhere in the loop.
+
+    ``batched_anchor``: the anchor is (G, R, LANE) — one per element —
+    instead of one (R, LANE) plane shared by the group.  This is the
+    multi-run form (``local_train_multi``): elements from different
+    seeded runs, each proximal to its own global model, in one scan.
+    """
+    key = (loss_fn, spec, batched_anchor)
     if key not in _PLANE_TRAIN_CACHE:
         interpret = ops.INTERPRET
 
@@ -105,8 +111,9 @@ def _plane_train_fn(loss_fn, spec):
         vgrad = jax.vmap(jax.value_and_grad(plane_loss))
 
         def run(p_stack, anchor, batches, weights, a, eta, mu):
-            """p_stack: (G, R, LANE); anchor: (R, LANE); ``batches``
-            leaves (gamma, G, bucket, ...); weights (gamma, G, bucket);
+            """p_stack: (G, R, LANE); anchor: (R, LANE) shared or
+            (G, R, LANE) per-element; ``batches`` leaves
+            (gamma, G, bucket, ...); weights (gamma, G, bucket);
             a: (gamma,) FedNova coefficients."""
             G = p_stack.shape[0]
             ones = jnp.ones((G,), jnp.float32)
@@ -165,10 +172,21 @@ def _gather_group_batches(datasets, step_keys, Ds, bucket, gamma, m_frac):
 
 
 def _local_train_batched_plane(params, loss_fn, datasets, *, gamma, m_frac,
-                               eta, mu, keys, keep_planes=False):
+                               eta, mu, keys, keep_planes=False,
+                               anchors=None):
     G = len(datasets)
-    plane = as_plane(params)
-    spec = plane.spec
+    if anchors is None:
+        plane = as_plane(params)
+        spec = plane.spec
+        p0 = plane.broadcast(G).data
+        anchor = plane.data
+    else:
+        planes = [as_plane(a) for a in anchors]
+        spec = planes[0].spec
+        assert all(p.spec == spec for p in planes), \
+            "multi-run groups must share one FlatSpec (same model)"
+        p0 = jnp.stack([p.data for p in planes], axis=0)
+        anchor = p0
     Ds = [jax.tree_util.tree_leaves(d)[0].shape[0] for d in datasets]
     bszs = [batch_size(D, m_frac) for D in Ds]
     bucket = _bucket(max(bszs))
@@ -182,8 +200,9 @@ def _local_train_batched_plane(params, loss_fn, datasets, *, gamma, m_frac,
         jnp.stack(keys))
     batches, weights = _gather_group_batches(datasets, step_keys, Ds,
                                              bucket, gamma, m_frac)
-    run = _plane_train_fn(loss_fn, spec)
-    p_stack, acc, losses = run(plane.broadcast(G).data, plane.data,
+    run = _plane_train_fn(loss_fn, spec,
+                          batched_anchor=anchors is not None)
+    p_stack, acc, losses = run(p0, anchor,
                                batches, weights, a,
                                jnp.asarray(eta, jnp.float32),
                                jnp.asarray(mu, jnp.float32))
@@ -393,6 +412,31 @@ def local_train_batched(params, loss_fn: Callable, datasets, *, gamma: int,
                                       gamma=gamma, m_frac=m_frac, eta=eta,
                                       mu=mu, keys=keys,
                                       keep_planes=keep_planes)
+
+
+def local_train_multi(anchors, loss_fn: Callable, datasets, *, gamma: int,
+                      m_frac: float, eta: float, mu: float, keys,
+                      keep_planes: bool = True):
+    """Grouped local training where every element carries ITS OWN global
+    params/anchor — the cross-run hot path of the multi-seed sweep
+    executor (``repro.experiments``): elements (run k, DPU i) drawn from
+    K different seeded runs batch into ONE jitted scan, each proximal to
+    its own run's global model.
+
+    ``anchors``: one ParamPlane (or pytree) per element, all sharing one
+    FlatSpec; ``datasets``/``keys``: as ``local_train_batched`` (all
+    datasets non-empty; empty DPUs are the caller's ``_empty_result``).
+    Per-element numerics are identical to ``local_train`` with that
+    element's anchor: the kernel applies the same elementwise update
+    whether the anchor is shared or per-element, and the per-element PRNG
+    streams don't depend on the group composition.
+    """
+    assert len(anchors) == len(datasets) == len(keys)
+    assert all(jax.tree_util.tree_leaves(d)[0].shape[0] > 0
+               for d in datasets), "local_train_multi needs live datasets"
+    return _local_train_batched_plane(
+        None, loss_fn, datasets, gamma=gamma, m_frac=m_frac, eta=eta,
+        mu=mu, keys=keys, keep_planes=keep_planes, anchors=anchors)
 
 
 def verify_accumulation_identity(params0, result: LocalResult, *, eta, mu):

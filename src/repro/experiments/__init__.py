@@ -1,0 +1,24 @@
+"""Declarative experiments: specs, presets, vmapped multi-seed sweeps,
+full-state resume.  See docs/experiments.md.
+
+    from repro import experiments
+    result = experiments.run("quickstart")
+    sweep = experiments.sweep("sweep_smoke", executor="vmap")
+"""
+from repro.experiments import presets  # noqa: F401  (registers built-ins)
+from repro.experiments.build import (  # noqa: F401
+    ExperimentContext, build_context, clear_context_cache,
+)
+from repro.experiments.run import run, sweep  # noqa: F401
+from repro.experiments.spec import (  # noqa: F401
+    ConstsSpec, DataSpec, EngineSpec, ExperimentSpec, ModelSpec,
+    NetworkSpec, ObjectiveSpec, available_experiments, from_json,
+    get_experiment, register_experiment, to_json,
+)
+from repro.experiments.sweep import (  # noqa: F401
+    RunKey, SequentialSweepExecutor, SweepResult, VmapSweepExecutor,
+    get_sweep_executor,
+)
+from repro.experiments.trace import (  # noqa: F401
+    TraceSink, read_trace, round_record,
+)

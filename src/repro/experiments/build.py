@@ -1,0 +1,162 @@
+"""Spec -> runnable context: network, data pool, model init, constants.
+
+``build_context`` is the ONE place the repo turns a declarative
+:class:`~repro.experiments.spec.ExperimentSpec` into live objects.  The
+pre-spec entry points (``benchmarks/common.py``, the examples) used to
+duplicate this derivation — including the one-shot constants estimation
+and its DC padding — with their own argparse and ad-hoc seeds; they now
+all come through here.
+
+Everything spec-level (network topology, data pool, initial params,
+constants, objective weights) is shared across the seeds of a sweep;
+only :meth:`ExperimentContext.make_ues` / :meth:`make_engine` take the
+per-run seed, and both derive every stream from it (the single-seed
+contract of ``spec.engine_options``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cefl_paper import ClassifierConfig
+from repro.core import Engine, MLConstants
+from repro.core.estimation import estimate_constants
+from repro.data import make_image_dataset, make_online_ues
+from repro.experiments.spec import ExperimentSpec, get_experiment
+from repro.models.classifier import (classifier_accuracy, classifier_loss,
+                                     init_classifier_params)
+from repro.network import NetworkConfig, make_network
+from repro.solver import ObjectiveWeights
+
+
+@dataclasses.dataclass
+class ExperimentContext:
+    """Live objects for one spec (shared across the seed sweep)."""
+    spec: ExperimentSpec
+    net: object
+    p0: object
+    loss_fn: Callable
+    eval_fn: Callable
+    consts: MLConstants
+    ow: ObjectiveWeights
+    train_x: np.ndarray
+    train_y: np.ndarray
+    test_x: np.ndarray
+    test_y: np.ndarray
+
+    def make_ues(self, seed: int):
+        """Per-run online UE streams — every stream PRNG derives from the
+        run seed (the spec's single-seed contract)."""
+        d = self.spec.data
+        return make_online_ues(
+            self.train_x, self.train_y, num_ue=self.spec.network.num_ue,
+            labels_per_ue=d.labels_per_ue, mean_arrivals=d.mean_arrivals,
+            std_arrivals=d.std_arrivals, seed=int(seed),
+            drift_labels=d.drift_labels)
+
+    def make_engine(self, seed: int, *, executor=None,
+                    callbacks=()) -> Engine:
+        return Engine(self.net, consts=self.consts, ow=self.ow,
+                      opts=self.spec.engine_options(seed),
+                      executor=executor, callbacks=callbacks)
+
+
+def _build_consts(spec: ExperimentSpec, ctx_parts) -> MLConstants:
+    c = spec.consts
+    N, S = spec.network.num_ue, spec.network.num_dc
+    if c.mode == "fixed":
+        nd = N + S
+        return MLConstants(L=c.L, theta_i=np.full(nd, c.theta),
+                           sigma_i=np.full(nd, c.sigma),
+                           zeta1=c.zeta1, zeta2=c.zeta2)
+    if c.mode != "estimate":
+        raise ValueError(f"unknown consts mode {c.mode!r}")
+    # one-shot pre-training estimation (paper Algs. 4-6, App. H-1) on
+    # probe streams seeded off the spec (not the run).  Theta/sigma are
+    # per-UE; DC entries (mixtures of offloaded UE data) take UE means.
+    p0, loss_fn, train_x, train_y = ctx_parts
+    probe = [ds.step() for ds in make_online_ues(
+        train_x, train_y, num_ue=N,
+        labels_per_ue=spec.data.labels_per_ue,
+        mean_arrivals=spec.data.mean_arrivals,
+        std_arrivals=spec.data.std_arrivals, seed=c.probe_seed)]
+    consts = estimate_constants(loss_fn, p0, probe,
+                                key=jax.random.PRNGKey(7),
+                                iters=c.estimate_iters)
+    return dataclasses.replace(
+        consts,
+        theta_i=np.concatenate([consts.theta_i,
+                                np.full(S, consts.theta_i.mean())]),
+        sigma_i=np.concatenate([consts.sigma_i,
+                                np.full(S, consts.sigma_i.mean())]))
+
+
+def _cache_key(spec: ExperimentSpec) -> ExperimentSpec:
+    """Strip the axes that don't affect the built objects — the run axes
+    (name, strategy, scenario, seeds) and ``data.drift_labels`` (it only
+    parameterizes ``make_ues`` streams, never the pool/consts/eval set)
+    — so a strategy/scenario/drift grid over one base spec shares a
+    single context build (and a single Algs. 4-6 constants
+    estimation)."""
+    return dataclasses.replace(
+        spec, name="", strategy="cefl", scenario="static", seeds=(),
+        data=dataclasses.replace(spec.data, drift_labels=False))
+
+
+@functools.lru_cache(maxsize=8)
+def _build_context_cached(spec: ExperimentSpec) -> ExperimentContext:
+    if spec.model.kind != "classifier":
+        raise ValueError(
+            f"build_context handles classifier specs; {spec.model.kind!r} "
+            f"runs through repro.experiments.lm")
+    m, d, n = spec.model, spec.data, spec.network
+    net = make_network(NetworkConfig(num_ue=n.num_ue, num_bs=n.num_bs,
+                                     num_dc=n.num_dc,
+                                     seed=n.topology_seed))
+    (trx, tr_y), (tex, te_y) = make_image_dataset(
+        d.pool, tuple(m.input_shape), num_classes=m.num_classes,
+        seed=d.pool_seed)
+    ccfg = ClassifierConfig(input_shape=tuple(m.input_shape),
+                            hidden=tuple(m.hidden),
+                            num_classes=m.num_classes)
+    p0 = init_classifier_params(jax.random.PRNGKey(d.pool_seed), ccfg)
+    ex, ey = jnp.asarray(tex[:d.eval_examples]), \
+        jnp.asarray(te_y[:d.eval_examples])
+
+    def eval_fn(p):
+        return classifier_accuracy(p, ex, ey)
+
+    consts = _build_consts(spec, (p0, classifier_loss, trx, tr_y))
+    o = spec.objective
+    ow = ObjectiveWeights(xi1=o.xi1, xi2=o.xi2, xi3=o.xi3, drift=o.drift,
+                          T=spec.engine.rounds)
+    return ExperimentContext(spec=spec, net=net, p0=p0,
+                             loss_fn=classifier_loss, eval_fn=eval_fn,
+                             consts=consts, ow=ow,
+                             train_x=trx, train_y=tr_y,
+                             test_x=tex, test_y=te_y)
+
+
+def build_context(spec, *, cache: bool = True) -> ExperimentContext:
+    """Build (or fetch the cached) context for a spec or preset name.
+
+    The cache key ignores name/strategy/scenario/seeds — a grid over
+    those axes shares one build — and the returned context carries the
+    REAL spec (``make_engine`` needs its strategy/scenario/seeds)."""
+    spec = get_experiment(spec)
+    if cache:
+        ctx = _build_context_cached(_cache_key(spec))
+    else:
+        ctx = _build_context_cached.__wrapped__(_cache_key(spec))
+    if ctx.spec != spec:
+        ctx = dataclasses.replace(ctx, spec=spec)
+    return ctx
+
+
+def clear_context_cache() -> None:
+    _build_context_cached.cache_clear()

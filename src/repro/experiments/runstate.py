@@ -1,0 +1,129 @@
+"""Full-state sweep checkpoints: kill a sweep mid-run, resume bit-exact.
+
+A sweep's :class:`RunState` is everything the remaining rounds depend
+on, per seeded run:
+
+* the engine :class:`~repro.core.engine.LoopState` (flat param plane,
+  PRNG chain, warm-start plan, cumulative costs, round index),
+* the scenario's internal state (mobility positions/velocities, serving
+  associations, schedule state),
+* every UE's :class:`~repro.core.drift.OnlineDataset` state (stream PRNG
+  + live data buffer),
+* the metric trace so far (``RoundReport`` records).
+
+Serialization rides through ``repro.training.checkpoint``: array leaves
+go to the .npz, the nesting structure is packed into a JSON *skeleton*
+stored in the manifest metadata (with the report records, which are
+JSON-native).  ``load_checkpoint`` validates the leaf list before
+unpacking; shapes are data-dependent round to round (online buffers
+grow), so the like-tree is built from the manifest itself.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.engine import Engine, LoopState
+from repro.experiments.trace import report_from_record, report_to_record
+from repro.training.checkpoint import (load_checkpoint, read_manifest,
+                                       save_checkpoint)
+
+STATE_KIND = "cefl-sweep-state"
+
+
+# ------------------------------------------------- pack / unpack --------
+
+def _pack(obj, leaves: list):
+    """Nested dict/list/scalar structure -> JSON skeleton; ndarray leaves
+    are swapped for ``{"__leaf__": i}`` placeholders appended to
+    ``leaves`` (depth-first, deterministic order)."""
+    if isinstance(obj, np.ndarray):
+        leaves.append(obj)
+        return {"__leaf__": len(leaves) - 1}
+    if hasattr(obj, "dtype") and hasattr(obj, "shape"):   # jax arrays
+        leaves.append(np.asarray(obj))
+        return {"__leaf__": len(leaves) - 1}
+    if isinstance(obj, dict):
+        assert "__leaf__" not in obj, "reserved key"
+        return {str(k): _pack(v, leaves) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_pack(v, leaves) for v in obj]
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        if isinstance(obj, (bool, int)) and not isinstance(obj, bool):
+            obj = int(obj)
+        return obj
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    raise TypeError(f"cannot pack {type(obj).__name__} into run state")
+
+
+def _unpack(skel, leaves: list):
+    if isinstance(skel, dict):
+        if set(skel) == {"__leaf__"}:
+            return leaves[skel["__leaf__"]]
+        return {k: _unpack(v, leaves) for k, v in skel.items()}
+    if isinstance(skel, list):
+        return [_unpack(v, leaves) for v in skel]
+    return skel
+
+
+# ------------------------------------------------- save / load ----------
+
+def sweep_state_dict(runs) -> Tuple[dict, dict]:
+    """(array-state, json-reports) for a list of ``sweep._Run``s."""
+    state, reports = {}, {}
+    for run in runs:
+        key = str(run.seed)
+        state[key] = {
+            "loop": run.state.state_dict(),
+            "scenario": run.engine.scenario.state_dict(),
+            "ues": {str(i): u.state_dict()
+                    for i, u in enumerate(run.ues)},
+        }
+        reports[key] = [report_to_record(r) for r in run.state.reports]
+    return state, reports
+
+
+def save_sweep_state(path, runs, *, spec_json: str, round_idx: int) -> None:
+    state, reports = sweep_state_dict(runs)
+    leaves: List[np.ndarray] = []
+    skeleton = _pack(state, leaves)
+    save_checkpoint(path, leaves, step=round_idx, metadata={
+        "kind": STATE_KIND,
+        "skeleton": skeleton,
+        "reports": reports,
+        "spec": spec_json,
+    })
+
+
+def load_sweep_state(path):
+    """-> (state dict, reports dict, spec_json, round_idx).  The saved
+    leaf list is validated (count/treedef/shapes) against the manifest
+    before unpacking — a corrupted npz/manifest pair raises instead of
+    misassigning state."""
+    manifest = read_manifest(path)
+    meta = manifest["metadata"]
+    if meta.get("kind") != STATE_KIND:
+        raise ValueError(f"{path} is not a {STATE_KIND} checkpoint "
+                         f"(kind={meta.get('kind')!r})")
+    like = [np.zeros(s, dtype=d) for s, d in zip(manifest["shapes"],
+                                                 manifest["dtypes"])]
+    leaves, step, meta = load_checkpoint(path, like)
+    leaves = [np.asarray(l) for l in leaves]
+    state = _unpack(meta["skeleton"], leaves)
+    return state, meta["reports"], meta["spec"], step
+
+
+def restore_run(run, state: dict, reports: List[dict],
+                engine: Engine) -> None:
+    """Load one run's state into freshly built (round-0) objects."""
+    use_plane = bool(getattr(engine.executor, "use_plane", True))
+    assert isinstance(run.state, LoopState)
+    run.state.load_state_dict(state["loop"], use_plane=use_plane)
+    engine.scenario.load_state_dict(state["scenario"])
+    for i, u in enumerate(run.ues):
+        u.load_state_dict(state["ues"][str(i)])
+    run.state.reports = [report_from_record(r) for r in reports]

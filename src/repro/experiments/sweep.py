@@ -1,0 +1,337 @@
+"""Multi-seed sweep executors: K seeded runs, one batched device axis.
+
+With the flat :class:`~repro.kernels.plane.ParamPlane` representation a
+population of seeded runs is just one more batch axis.  Both executors
+drive K per-run :class:`~repro.core.engine.LoopState`s through the SAME
+``Engine.begin_round`` / ``finish_round`` host path (scenario ticks,
+solver decisions, offloading, PRNG chains — per run, bit-identical to a
+solo ``Engine.run``), and differ only in how the device work executes:
+
+* :class:`SequentialSweepExecutor` — each run's round goes through its
+  own ``SimExecutor.run_round`` (the pinned-bit-exact fallback, and the
+  baseline the sweep benchmark compares against).
+* :class:`VmapSweepExecutor` — every live (run, DPU) pair across ALL K
+  runs is stacked onto the leading axis of the parameter plane and
+  trained by ONE jitted scan per (gamma, m, bucket) group
+  (``fedprox.local_train_multi``: per-element anchors), with evaluation
+  vmapped over the K-stacked planes.  Per-run results are bit-exact vs
+  the sequential executor (asserted by tests/test_experiments.py): the
+  per-element math and PRNG streams do not depend on the group
+  composition.
+
+Both executors write per-round JSONL records through a
+:class:`~repro.experiments.trace.TraceSink` and checkpoint/resume full
+run state through ``repro.experiments.runstate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedprox
+from repro.core.api import RunResult, weighted_mean
+from repro.core.engine import SimExecutor, _aggregate, _plan_settings
+from repro.experiments import runstate
+from repro.experiments.build import ExperimentContext
+from repro.experiments.spec import to_json
+from repro.experiments.trace import TraceSink, round_record
+from repro.kernels.plane import as_plane, as_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class RunKey:
+    experiment: str
+    seed: int
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """What ``sweep`` returns: per-run results plus aggregate stats."""
+    runs: List[Tuple[RunKey, RunResult]]
+
+    def __len__(self) -> int:
+        return len(self.runs)
+
+    @property
+    def seeds(self) -> List[int]:
+        return [k.seed for k, _ in self.runs]
+
+    def result(self, seed: int, experiment: Optional[str] = None) \
+            -> RunResult:
+        for k, r in self.runs:
+            if k.seed == seed and (experiment is None
+                                   or k.experiment == experiment):
+                return r
+        raise KeyError((experiment, seed))
+
+    def series(self, field: str) -> Dict[RunKey, list]:
+        return {k: r.series(field) for k, r in self.runs}
+
+    def stats(self) -> Dict[str, dict]:
+        """Aggregate statistics per experiment name: mean/std/min/max of
+        final accuracy, mean cumulative energy/delay, mean final loss."""
+        by_name: Dict[str, list] = {}
+        for k, r in self.runs:
+            by_name.setdefault(k.experiment, []).append(r)
+        out = {}
+        for name, results in by_name.items():
+            accs = np.array([r.final.acc for r in results], float)
+            out[name] = {
+                "runs": len(results),
+                "final_acc_mean": float(accs.mean()),
+                "final_acc_std": float(accs.std()),
+                "final_acc_min": float(accs.min()),
+                "final_acc_max": float(accs.max()),
+                "final_loss_mean": float(np.mean(
+                    [r.final.loss for r in results])),
+                "cum_energy_mean": float(np.mean(
+                    [r.final.cum_energy for r in results])),
+                "cum_delay_mean": float(np.mean(
+                    [r.final.cum_delay for r in results])),
+                "rounds": int(np.mean([len(r) for r in results])),
+            }
+        return out
+
+    def merged(self, other: "SweepResult") -> "SweepResult":
+        return SweepResult(runs=self.runs + other.runs)
+
+
+@dataclasses.dataclass
+class _Run:
+    """One seeded run inside a sweep: its engine, streams, loop state."""
+    seed: int
+    engine: object
+    ues: list
+    state: object
+
+
+class _LockstepSweep:
+    """Shared round-lockstep loop; subclasses provide the device phase.
+
+    ``checkpoint_dir``/``checkpoint_every`` enable full-state snapshots
+    every N rounds; ``resume=True`` restores the latest snapshot (a spec
+    mismatch raises).  ``stop_after`` ends the loop after that many
+    rounds *with* a snapshot — the tested kill point of the
+    kill-and-resume guarantee.
+    """
+
+    executor_name = "sequential"
+
+    def __init__(self, *, checkpoint_dir=None, checkpoint_every: int = 0,
+                 resume: bool = False, stop_after: Optional[int] = None):
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.resume = resume
+        self.stop_after = stop_after
+        if (checkpoint_every or stop_after or resume) \
+                and not checkpoint_dir:
+            raise ValueError("checkpointing/resume needs checkpoint_dir")
+
+    # ------------------------------------------------------ lifecycle --
+
+    def _init_runs(self, ctx: ExperimentContext) -> List[_Run]:
+        runs = []
+        for seed in ctx.spec.run_seeds:
+            engine = ctx.make_engine(seed, executor=SimExecutor())
+            ues = ctx.make_ues(seed)
+            state = engine.init_loop(ues, init_params=ctx.p0,
+                                     loss_fn=ctx.loss_fn,
+                                     eval_fn=ctx.eval_fn)
+            runs.append(_Run(seed=seed, engine=engine, ues=ues,
+                             state=state))
+        return runs
+
+    def _maybe_resume(self, ctx, runs: List[_Run]) -> None:
+        import os
+        if not (self.resume and self.checkpoint_dir
+                and os.path.exists(os.path.join(self.checkpoint_dir,
+                                                "manifest.json"))):
+            return
+        state, reports, spec_json, _ = runstate.load_sweep_state(
+            self.checkpoint_dir)
+        if spec_json != to_json(ctx.spec):
+            raise ValueError(
+                f"checkpoint in {self.checkpoint_dir} was written by a "
+                f"different spec; refusing to resume")
+        for run in runs:
+            key = str(run.seed)
+            if key not in state:
+                raise ValueError(f"checkpoint has no state for seed "
+                                 f"{run.seed}")
+            runstate.restore_run(run, state[key], reports[key],
+                                 run.engine)
+
+    def _save(self, ctx, runs: List[_Run], round_idx: int) -> None:
+        if self.checkpoint_dir:
+            runstate.save_sweep_state(self.checkpoint_dir, runs,
+                                      spec_json=to_json(ctx.spec),
+                                      round_idx=round_idx)
+
+    # ----------------------------------------------------- round loop --
+
+    def run_sweep(self, ctx: ExperimentContext, *,
+                  trace: Optional[TraceSink] = None) -> SweepResult:
+        trace = trace or TraceSink(None)
+        runs = self._init_runs(ctx)
+        self._maybe_resume(ctx, runs)
+        rounds = ctx.spec.engine.rounds
+        while True:
+            active = [r for r in runs
+                      if r.state.t < rounds and not r.state.stopped]
+            if not active:
+                break
+            t = active[0].state.t
+            assert all(r.state.t == t for r in active), \
+                "lockstep sweep requires equal round indices"
+            staged = [r.engine.begin_round(r.state, r.ues)
+                      for r in active]
+            self._device_phase(ctx, active, staged)
+            for run in active:
+                rep = run.state.reports[-1]
+                trace.write(round_record(ctx.spec.name, run.seed, rep,
+                                         executor=self.executor_name))
+            done = t + 1
+            if self.checkpoint_every and done % self.checkpoint_every == 0:
+                self._save(ctx, runs, done)
+            if self.stop_after is not None and done >= self.stop_after:
+                self._save(ctx, runs, done)
+                break
+        return SweepResult(runs=[
+            (RunKey(ctx.spec.name, r.seed),
+             RunResult(reports=r.state.reports,
+                       params=as_tree(r.state.params)))
+            for r in runs])
+
+    def _device_phase(self, ctx, active: List[_Run], staged) -> None:
+        raise NotImplementedError
+
+
+class SequentialSweepExecutor(_LockstepSweep):
+    """Per-run device work through each run's own SimExecutor — the
+    bit-exactness oracle and the benchmark baseline."""
+
+    executor_name = "sequential"
+
+    def _device_phase(self, ctx, active, staged) -> None:
+        for run, st in zip(active, staged):
+            engine = run.engine
+            run.state.params, mean_loss = engine.executor.run_round(
+                run.state.params, st.plan, st.datasets,
+                loss_fn=run.state.loss_fn, eta=engine.opts.eta,
+                mu=engine.mu_effective, theta=engine.opts.theta,
+                agg=engine.aggregation, key=st.key)
+            engine.finish_round(run.state, st, mean_loss)
+
+
+class VmapSweepExecutor(_LockstepSweep):
+    """All K runs' device work on one leading plane axis per round.
+
+    Per (gamma, m, bucket) group — across runs — one
+    ``fedprox.local_train_multi`` call trains every member (per-element
+    anchor = that run's global plane); aggregation runs per-run on the
+    fused kernel; evaluation is ONE vmapped call over the K-stacked
+    planes.  Host-side decisions (scenario, solver, offloading) stay
+    per-run, so plans/streams match the sequential executor exactly.
+    """
+
+    executor_name = "vmap"
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self._eval_cache = {}
+
+    def _batched_eval(self, ctx, spec):
+        # keyed on the eval fn too: one executor instance may serve specs
+        # that share a FlatSpec but evaluate on different data
+        key = (id(ctx.eval_fn), spec)
+        if key not in self._eval_cache:
+            eval_fn = ctx.eval_fn
+            self._eval_cache[key] = jax.jit(jax.vmap(
+                lambda data: eval_fn(spec.unflatten(data))))
+        return self._eval_cache[key]
+
+    def _device_phase(self, ctx, active, staged) -> None:
+        groups: Dict[tuple, list] = {}
+        run_results = [[None] * 0 for _ in active]
+        live_per_run = []
+        for k, (run, st) in enumerate(zip(active, staged)):
+            plan = st.plan
+            gammas, ms = _plan_settings(plan)
+            live = [(i, d) for i, d in enumerate(st.datasets)
+                    if d is not None and len(d["y"])]
+            live_per_run.append(live)
+            run_results[k] = [None] * len(live)
+            if not live:
+                continue
+            keys = jax.random.split(st.key, len(live))
+            anchor = as_plane(run.state.params)
+            for j, (i, d) in enumerate(live):
+                bucket = fedprox._bucket(
+                    fedprox.batch_size(len(d["y"]), ms[i]))
+                groups.setdefault(
+                    (int(gammas[i]), float(ms[i]), bucket), []).append(
+                        (k, j, d, anchor, keys[j]))
+        for (gamma, m, _bucket), members in groups.items():
+            eng0 = active[members[0][0]].engine
+            out = fedprox.local_train_multi(
+                [mb[3] for mb in members], ctx.loss_fn,
+                [mb[2] for mb in members], gamma=gamma, m_frac=m,
+                eta=eng0.opts.eta, mu=eng0.mu_effective,
+                keys=[mb[4] for mb in members], keep_planes=True)
+            for (k, j, _, _, _), res in zip(members, out):
+                run_results[k][j] = res
+        # per-run aggregation (fused eq.-11 kernel on the plane)
+        mean_losses = []
+        for k, (run, st) in enumerate(zip(active, staged)):
+            engine = run.engine
+            results = run_results[k]
+            if not results:
+                mean_losses.append(float("nan"))
+                continue
+            run.state.params = _aggregate(
+                as_plane(run.state.params), results, engine.aggregation,
+                eta=engine.opts.eta, theta=engine.opts.theta)
+            mean_losses.append(weighted_mean(
+                [r.loss for r in results],
+                [r.num_examples for r in results]))
+        # ONE vmapped eval over the K-stacked planes (eval cadence is
+        # spec-level, so every active run evals on the same rounds)
+        t = staged[0].t
+        if active and active[0].engine.should_eval(t):
+            planes = [as_plane(r.state.params) for r in active]
+            spec0 = planes[0].spec
+            accs = np.asarray(self._batched_eval(ctx, spec0)(
+                jnp.stack([p.data for p in planes], axis=0)))
+            acc_of = {id(r): float(a) for r, a in zip(active, accs)}
+        else:
+            acc_of = {id(r): r.state.last_acc for r in active}
+        for run, st, mean_loss in zip(active, staged, mean_losses):
+            run.engine.finish_round(run.state, st, mean_loss,
+                                    acc=acc_of[id(run)])
+
+
+_EXECUTORS = {
+    "sequential": SequentialSweepExecutor,
+    "vmap": VmapSweepExecutor,
+}
+
+
+def get_sweep_executor(name: str, **kw) -> _LockstepSweep:
+    if isinstance(name, _LockstepSweep):
+        if any(v for v in kw.values()):
+            raise ValueError(
+                "cannot combine a pre-configured executor instance with "
+                f"executor kwargs {sorted(k for k, v in kw.items() if v)}; "
+                "pass the executor name and the kwargs, or configure the "
+                "instance itself")
+        return name
+    try:
+        cls = _EXECUTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown sweep executor {name!r}; available: "
+                       f"{sorted(_EXECUTORS)}") from None
+    return cls(**kw)

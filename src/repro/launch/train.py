@@ -1,28 +1,22 @@
-"""CE-FL LM training launcher (real execution on local devices).
+"""CE-FL LM training launcher — DEPRECATED argparse shim.
 
-Runs the mesh-native CE-FL round step — built through the orchestration
-engine's :class:`~repro.core.engine.MeshExecutor` — on an actual (small)
-mesh: the CPU path that examples and tests use; on a TPU slice the
-identical code runs on ``make_production_mesh()``.
+The launcher is now spec-driven: ``repro.experiments.lm.run_lm`` runs
+the identical mesh-native round step from an
+:class:`~repro.experiments.spec.ExperimentSpec` (presets ``lm_smoke`` /
+``lm_mamba2_130m``).  This module keeps the old CLI working by
+translating its flags into spec overrides:
 
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
       --steps 20 --batch 8 --seq 256 [--reduced] [--gamma 2]
+
+is equivalent to
+
+  PYTHONPATH=src python -m repro.experiments run lm_smoke \
+      --set model.arch=mamba2-130m --set engine.rounds=20 ...
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, reduced
-from repro.core.engine import MeshExecutor
-from repro.core.round_step import CEFLHyper, make_dpu_meta
-from repro.data import make_token_batches
-from repro.kernels.plane import ParamPlane
-from repro.models import lm as L
-from repro.training.checkpoint import save_checkpoint
 
 
 def main(argv=None):
@@ -45,56 +39,26 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
-          f"{args.n_dpu} DPUs x gamma={args.gamma}")
-    key = jax.random.PRNGKey(args.seed)
-    params0 = L.init_lm_params(key, cfg, jnp.float32)
-    if args.tree:
-        params = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (args.n_dpu,) + x.shape),
-            params0)
-    else:
-        # flat-plane hot path: params stay (n_dpu, R, LANE) for the whole
-        # run; the tree view is materialized only at the checkpoint
-        params = ParamPlane.from_tree(params0).broadcast(args.n_dpu)
+    from repro.experiments import get_experiment
+    from repro.experiments.lm import run_lm
 
-    def loss_fn(p, micro, mask):
-        return L.lm_loss(p, cfg, micro, example_mask=mask, remat=True,
-                         q_block=min(512, args.seq),
-                         kv_block=min(512, args.seq))
-
-    hyper = CEFLHyper(eta=args.eta, mu=args.mu,
-                      theta=float(args.gamma),   # tau_eff compensation
-                      gamma_max=args.gamma, n_micro=args.n_micro)
-    step = MeshExecutor().build_step(loss_fn, hyper)   # jitted, donating
-    meta = make_dpu_meta(args.n_dpu,
-                         gammas=[args.gamma] * args.n_dpu)
-
-    mb = args.batch // (args.n_dpu * args.n_micro)
-    losses = []
-    for t in range(args.steps):
-        b = make_token_batches(
-            cfg.vocab_size, args.n_dpu, args.n_micro, mb, args.seq,
-            seed=args.seed * 10000 + t,
-            enc_seq=cfg.encoder_seq if cfg.is_encdec else 0,
-            d_model=cfg.d_model)
-        b = {k: jnp.asarray(v) for k, v in b.items()}
-        t0 = time.time()
-        params, metrics = step(params, b, meta)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        print(f"  round {t:4d}  loss {loss:8.4f}  ({time.time()-t0:.2f}s)")
-    if args.checkpoint:
-        final = (params[0].to_tree() if isinstance(params, ParamPlane)
-                 else jax.tree_util.tree_map(lambda x: x[0], params))
-        save_checkpoint(args.checkpoint, final, step=args.steps)
-        print(f"[train] checkpoint -> {args.checkpoint}")
-    assert losses[-1] < losses[0], "loss did not decrease"
-    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
-    return losses
+    spec = get_experiment("lm_smoke").override(**{
+        "name": "launch.train",
+        "model.arch": args.arch,
+        "model.reduced": args.reduced,
+        "model.batch": args.batch,
+        "model.seq": args.seq,
+        "model.n_dpu": args.n_dpu,
+        "model.n_micro": args.n_micro,
+        "model.gamma": args.gamma,
+        "engine.rounds": args.steps,
+        "engine.eta": args.eta,
+        "engine.mu": args.mu,
+        "seeds": (args.seed,),
+    })
+    result = run_lm(spec, checkpoint=args.checkpoint,
+                    use_plane=not args.tree)
+    return [r.loss for r in result.reports]
 
 
 if __name__ == "__main__":

@@ -113,3 +113,11 @@ class StaticScenario:
         net_t = self._net.resample_rates(rng, self._jitter)
         return net_t, data, ScenarioEvents(round=t,
                                            active_ues=len(online_datasets))
+
+    # full-state resume: the static world keeps no mutable state beyond
+    # what bind() derives; the jitter draws live on the engine rng
+    def state_dict(self) -> dict:
+        return {}
+
+    def load_state_dict(self, d: dict) -> None:
+        pass

@@ -113,6 +113,22 @@ class JoinLeave:
     def events(self):
         return self._joined, self._left
 
+    def state_dict(self):
+        if self._active is None:
+            return {"initialized": 0}
+        return {"initialized": 1, "active": np.asarray(self._active),
+                "joined": np.asarray(self._joined, np.int64),
+                "left": np.asarray(self._left, np.int64)}
+
+    def load_state_dict(self, d):
+        if not int(d["initialized"]):
+            self._active = None
+            self._joined, self._left = (), ()
+            return
+        self._active = np.asarray(d["active"], bool)
+        self._joined = tuple(int(u) for u in np.asarray(d["joined"]))
+        self._left = tuple(int(u) for u in np.asarray(d["left"]))
+
     def apply(self, t, ue, data, rng):
         if self._active is not None and not self._active[ue]:
             return empty_like(data)

@@ -1,5 +1,14 @@
 """Checkpointing: flat-leaf .npz files with a JSON treedef manifest —
 dependency-free, deterministic, restartable.
+
+``save_checkpoint`` flattens any pytree into ``arrays.npz`` plus a
+``manifest.json`` (treedef string, per-leaf shapes/dtypes, step, caller
+metadata).  ``load_checkpoint`` restores into the *structure* of a caller
+``like_tree`` and validates it against the manifest before any leaf is
+assigned — a structure mismatch used to silently misassign leaves; now it
+raises with the exact discrepancy.  The saved ``metadata`` dict rides back
+to the caller (the experiments resume path stores its state skeleton
+there).
 """
 from __future__ import annotations
 
@@ -33,12 +42,67 @@ def save_checkpoint(path, tree, step: int = 0, metadata: dict = None):
     (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
 
 
-def load_checkpoint(path, like_tree):
-    """Restore into the structure of ``like_tree`` (shapes must match)."""
+def read_manifest(path) -> dict:
+    """The checkpoint's manifest dict (treedef string, num_leaves, step,
+    per-leaf shapes/dtypes, metadata) without touching the arrays."""
+    return json.loads((Path(path) / "manifest.json").read_text())
+
+
+def _validate(manifest: dict, like_tree, path, strict_shapes: bool):
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    errs = []
+    if len(leaves) != manifest["num_leaves"]:
+        errs.append(f"leaf count: checkpoint has {manifest['num_leaves']}, "
+                    f"like_tree has {len(leaves)}")
+    if str(treedef) != manifest["treedef"]:
+        errs.append(f"treedef: checkpoint {manifest['treedef']} != "
+                    f"like_tree {treedef}")
+    if strict_shapes and len(leaves) == manifest["num_leaves"]:
+        for i, (leaf, want) in enumerate(zip(leaves, manifest["shapes"])):
+            got = list(np.shape(leaf))
+            if got != want:
+                errs.append(f"leaf {i} shape: checkpoint {want}, "
+                            f"like_tree {got}")
+    if errs:
+        raise ValueError(
+            f"checkpoint {path} does not match like_tree: "
+            + "; ".join(errs))
+    return treedef
+
+
+def load_checkpoint(path, like_tree, *, strict_shapes: bool = True):
+    """Restore a checkpoint into the structure of ``like_tree``.
+
+    The manifest is validated against ``like_tree`` (leaf count, treedef,
+    and — unless ``strict_shapes=False`` — per-leaf shapes) *before* any
+    leaf is assigned, so a structure mismatch raises instead of silently
+    misassigning leaves.  ``strict_shapes=False`` is for states whose leaf
+    shapes are legitimately data-dependent (e.g. the experiments RunState,
+    whose online-data buffers grow round to round).
+
+    Returns ``(tree, step, metadata)`` — ``metadata`` is the dict passed
+    to :func:`save_checkpoint` (the resume path needs it).
+    """
     path = Path(path)
-    manifest = json.loads((path / "manifest.json").read_text())
+    manifest = read_manifest(path)
+    treedef = _validate(manifest, like_tree, path, strict_shapes)
     data = np.load(path / "arrays.npz")
-    leaves = [jnp.asarray(data[f"leaf_{i}"]).astype(manifest["dtypes"][i])
+    leaves = [_restore_dtype(data[f"leaf_{i}"], manifest["dtypes"][i])
               for i in range(manifest["num_leaves"])]
-    _, treedef = jax.tree_util.tree_flatten(like_tree)
-    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+    return (jax.tree_util.tree_unflatten(treedef, leaves),
+            manifest["step"], manifest["metadata"])
+
+
+def _restore_dtype(a: np.ndarray, want: str):
+    """Restore the recorded dtype WITHOUT bouncing through jnp — with
+    x64 disabled, ``jnp.asarray`` silently truncates float64/int64
+    leaves, which breaks the bit-exact resume guarantee for run state."""
+    if str(a.dtype) == want:
+        return a
+    if want == "bfloat16":
+        try:
+            import ml_dtypes
+            return a.astype(ml_dtypes.bfloat16)
+        except ImportError:          # bf16 master copy stays f32
+            return jnp.asarray(a).astype(jnp.bfloat16)
+    return a.astype(want)

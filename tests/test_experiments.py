@@ -1,0 +1,261 @@
+"""Declarative experiment API (repro/experiments/): spec JSON round
+trips, preset registry, vmapped-vs-sequential sweep parity (bit-exact),
+kill-and-resume determinism under campus_walk, checkpoint validation,
+trace record round trips, and the single-source-of-seeds contract."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import experiments as E
+from repro.core.api import EngineOptions
+from repro.experiments.trace import report_from_record, report_to_record
+
+
+def _smoke(**over):
+    spec = E.get_experiment("sweep_smoke")
+    return spec.override(**over) if over else spec
+
+
+def _flat(params):
+    return np.concatenate([np.ravel(np.asarray(x))
+                           for x in jax.tree_util.tree_leaves(params)])
+
+
+def _assert_runs_identical(a, b):
+    assert a.series("loss") == b.series("loss")
+    assert a.series("acc") == b.series("acc")
+    assert a.series("aggregator") == b.series("aggregator")
+    assert [r.handovers for r in a.reports] == \
+        [r.handovers for r in b.reports]
+    assert [r.dc_points for r in a.reports] == \
+        [r.dc_points for r in b.reports]
+    for ra, rb in zip(a.reports, b.reports):
+        for k, va in ra.plan.to_w().items():
+            assert np.array_equal(np.asarray(va),
+                                  np.asarray(rb.plan.to_w()[k])), \
+                (ra.round, k)
+    assert np.array_equal(_flat(a.params), _flat(b.params))
+
+
+# ------------------------------------------------------------- spec -----
+
+def test_spec_json_roundtrip_all_presets():
+    for name in E.available_experiments():
+        spec = E.get_experiment(name)
+        back = E.from_json(E.to_json(spec))
+        assert back == spec, name
+        assert isinstance(back.seeds, tuple)
+        assert isinstance(back.model.input_shape, tuple)
+
+
+def test_spec_override_paths_and_coercion():
+    spec = _smoke()
+    out = spec.override(**{"engine.rounds": 5, "strategy": "fixed:0",
+                           "seeds": "0,3", "network.num_ue": "7",
+                           "data.drift_labels": "true"})
+    assert out.engine.rounds == 5
+    assert out.strategy == "fixed:0"
+    assert out.seeds == (0, 3)
+    assert out.network.num_ue == 7
+    assert out.data.drift_labels is True
+    assert spec.engine.rounds == 3          # original untouched
+    with pytest.raises(KeyError, match="no field"):
+        spec.override(**{"engine.nope": 1})
+
+
+def test_registry_and_engine_options_seed_contract():
+    assert {"quickstart", "paper_table1", "campus_walk_vs_fixed",
+            "sweep_smoke"} <= set(E.available_experiments())
+    with pytest.raises(KeyError, match="unknown experiment"):
+        E.get_experiment("nope")
+    spec = _smoke()
+    opts = spec.engine_options(17)
+    assert isinstance(opts, EngineOptions)
+    # ONE seed feeds engine + scenario + (via make_ues) the data streams
+    assert opts.seed == 17
+    assert opts.strategy == spec.strategy
+    assert opts.scenario == spec.scenario
+    ctx = E.build_context(spec)
+    ues_a = ctx.make_ues(17)
+    ues_b = ctx.make_ues(17)
+    da, db = ues_a[0].step(), ues_b[0].step()
+    assert np.array_equal(np.asarray(da["y"]), np.asarray(db["y"]))
+    assert len(ues_a) == spec.network.num_ue
+
+
+def test_context_cache_shared_across_strategy_grid():
+    base = _smoke()
+    a = E.build_context(base)
+    b = E.build_context(base.override(**{"name": "other",
+                                         "strategy": "fixed:0"}))
+    assert a.net is b.net                  # one build for the whole grid
+    assert b.spec.strategy == "fixed:0"    # but the real spec rides along
+
+
+# ------------------------------------------------------------ sweep -----
+
+def test_spec_roundtrip_runs_identically():
+    spec = _smoke(**{"engine.rounds": 2, "scenario": "static"})
+    r1 = E.run(spec, seed=0)
+    r2 = E.run(E.from_json(E.to_json(spec)), seed=0)
+    _assert_runs_identical(r1, r2)
+
+
+def test_vmap_vs_sequential_sweep_parity():
+    """The acceptance bit-exactness: same per-seed losses/accs/plans from
+    the vmapped executor and the sequential fallback."""
+    spec = _smoke()
+    seq = E.sweep(spec, executor="sequential")
+    vm = E.sweep(spec, executor="vmap")
+    assert seq.seeds == vm.seeds == list(spec.run_seeds)
+    for seed in spec.run_seeds:
+        _assert_runs_identical(seq.result(seed), vm.result(seed))
+    st = vm.stats()["sweep_smoke"]
+    assert st["runs"] == len(spec.run_seeds)
+    assert 0.0 <= st["final_acc_mean"] <= 1.0
+
+
+def test_sweep_spec_grid_unique_names_and_merge():
+    base = _smoke(**{"engine.rounds": 2, "scenario": "static",
+                     "seeds": (0,)})
+    grid = [base.override(**{"name": "a"}),
+            base.override(**{"name": "b", "strategy": "fixed:0"})]
+    res = E.sweep(grid, executor="sequential")
+    assert len(res) == 2
+    assert set(res.stats()) == {"a", "b"}
+    with pytest.raises(ValueError, match="unique names"):
+        E.sweep([base, base])
+
+
+def test_trace_sink_jsonl(tmp_path):
+    spec = _smoke(**{"engine.rounds": 2, "scenario": "static",
+                     "seeds": (0,)})
+    path = tmp_path / "trace.jsonl"
+    with E.TraceSink(path) as sink:
+        E.sweep(spec, executor="vmap", trace=sink)
+    records = E.read_trace(path)
+    assert len(records) == 2
+    assert all(r["kind"] == "round" and r["experiment"] == spec.name
+               and r["executor"] == "vmap" for r in records)
+    assert [r["round"] for r in records] == [0, 1]
+
+
+def test_report_record_roundtrip():
+    res = E.run(_smoke(**{"engine.rounds": 1, "scenario": "static"}),
+                seed=0)
+    rep = res.reports[0]
+    back = report_from_record(report_to_record(rep))
+    assert back.loss == rep.loss and back.acc == rep.acc
+    assert back.handovers == rep.handovers
+    assert back.dc_points == rep.dc_points
+    for k, v in rep.plan.to_w().items():
+        assert np.array_equal(np.asarray(v),
+                              np.asarray(back.plan.to_w()[k])), k
+
+
+# -------------------------------------------------- resume / ckpt -------
+
+def test_kill_and_resume_matches_uninterrupted(tmp_path):
+    """The acceptance determinism guarantee: a sweep killed after round 2
+    (full-state snapshot) and resumed reproduces the uninterrupted run's
+    loss/plan/handover traces and final params exactly — under the
+    dynamic campus_walk scenario (mobility state, stream PRNGs, warm
+    starts all round-trip the checkpoint)."""
+    spec = _smoke(**{"engine.rounds": 4})
+    assert spec.scenario == "campus_walk"
+    full = E.sweep(spec, executor="vmap")
+    ck = tmp_path / "ck"
+    part = E.sweep(spec, executor="vmap", checkpoint_dir=ck, stop_after=2)
+    for seed in spec.run_seeds:
+        assert len(part.result(seed)) == 2
+    res = E.sweep(spec, executor="vmap", checkpoint_dir=ck, resume=True)
+    for seed in spec.run_seeds:
+        _assert_runs_identical(full.result(seed), res.result(seed))
+
+
+def test_resume_refuses_spec_mismatch(tmp_path):
+    spec = _smoke(**{"engine.rounds": 3})
+    ck = tmp_path / "ck"
+    E.sweep(spec, executor="sequential", checkpoint_dir=ck, stop_after=1)
+    other = spec.override(**{"engine.eta": 0.2})
+    with pytest.raises(ValueError, match="different spec"):
+        E.sweep(other, executor="sequential", checkpoint_dir=ck,
+                resume=True)
+
+
+def test_checkpoint_validates_structure(tmp_path):
+    from repro.training.checkpoint import load_checkpoint, save_checkpoint
+    tree = {"a": np.arange(6.0).reshape(2, 3), "b": {"c": np.ones(4)}}
+    save_checkpoint(tmp_path / "ck", tree, step=3, metadata={"k": "v"})
+    back, step, meta = load_checkpoint(tmp_path / "ck", tree)
+    assert step == 3 and meta == {"k": "v"}
+    # treedef mismatch (extra leaf) -> clear error, nothing misassigned
+    with pytest.raises(ValueError, match="leaf count"):
+        load_checkpoint(tmp_path / "ck",
+                        {"a": tree["a"], "b": {"c": tree["b"]["c"],
+                                               "d": np.ones(1)}})
+    # same leaf count, different structure -> treedef error
+    with pytest.raises(ValueError, match="treedef"):
+        load_checkpoint(tmp_path / "ck",
+                        {"x": tree["a"], "y": np.ones(4)})
+    # shape mismatch -> error unless strict_shapes=False
+    bad = {"a": np.zeros((3, 2)), "b": {"c": np.ones(4)}}
+    with pytest.raises(ValueError, match="shape"):
+        load_checkpoint(tmp_path / "ck", bad)
+    back, _, _ = load_checkpoint(tmp_path / "ck", bad,
+                                 strict_shapes=False)
+    assert np.asarray(back["a"]).shape == (2, 3)   # saved shapes win
+    # float64 leaves survive exactly (no jnp truncation on restore)
+    assert np.asarray(back["a"]).dtype == np.float64
+
+
+# ------------------------------------------------------ eval cadence ----
+
+def test_eval_cadence_carries_acc_forward():
+    spec = _smoke(**{"engine.rounds": 4, "scenario": "static",
+                     "seeds": (0,), "engine.eval_every": 3})
+    res = E.run(spec, seed=0)
+    accs = res.series("acc")
+    # evals at t=0 and t=3 (cadence + final round); t=1,2 carry t=0
+    assert accs[1] == accs[0] and accs[2] == accs[0]
+    assert len(accs) == 4
+
+
+# -------------------------------------------------------------- lm ------
+
+def test_lm_spec_dispatch_smoke():
+    spec = E.get_experiment("lm_smoke").override(
+        **{"engine.rounds": 4, "model.batch": 4, "model.seq": 64})
+    res = E.run(spec)
+    assert len(res.reports) == 4
+    assert res.reports[-1].loss < res.reports[0].loss
+
+
+# -------------------------------------------------------------- cli -----
+
+def test_cli_show_and_validate(capsys):
+    from repro.experiments.__main__ import main
+    assert main(["list"]) == 0
+    assert main(["show", "sweep_smoke", "--set", "engine.rounds=5"]) == 0
+    out = capsys.readouterr().out
+    assert '"rounds": 5' in out
+    assert main(["validate", "sweep_smoke"]) == 0
+
+
+def test_run_state_pack_unpack_roundtrip():
+    from repro.experiments.runstate import _pack, _unpack
+    state = {"a": np.arange(5), "nested": {"b": 1.5, "c": "s",
+                                           "d": None, "e": True,
+                                           "arr": np.eye(2)},
+             "lst": [np.zeros(3), 7]}
+    leaves = []
+    skel = _pack(state, leaves)
+    assert len(leaves) == 3
+    back = _unpack(skel, leaves)
+    assert np.array_equal(back["a"], state["a"])
+    assert back["nested"]["b"] == 1.5 and back["nested"]["d"] is None
+    assert back["nested"]["e"] is True
+    assert np.array_equal(back["lst"][0], state["lst"][0])
+    assert dataclasses.is_dataclass(E.get_experiment("quickstart"))

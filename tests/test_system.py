@@ -108,9 +108,10 @@ def test_checkpoint_roundtrip(tmp_path):
     from repro.training import load_checkpoint, save_checkpoint
     tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
             "b": {"c": jnp.ones((4,))}}
-    save_checkpoint(tmp_path / "ck", tree, step=7)
-    back, step = load_checkpoint(tmp_path / "ck", tree)
+    save_checkpoint(tmp_path / "ck", tree, step=7, metadata={"tag": "t"})
+    back, step, meta = load_checkpoint(tmp_path / "ck", tree)
     assert step == 7
+    assert meta == {"tag": "t"}
     for a, b in zip(jax.tree_util.tree_leaves(back),
                     jax.tree_util.tree_leaves(tree)):
         assert a.dtype == b.dtype
