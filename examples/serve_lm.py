@@ -30,14 +30,14 @@ def main():
         cfg = reduced(cfg)
     print(f"[serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"batch={args.batch}")
-    key = jax.random.PRNGKey(0)
+    key, k_prompt, k_enc = jax.random.split(jax.random.PRNGKey(0), 3)
     params = L.init_lm_params(key, cfg, jnp.float32)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+    prompts = jax.random.randint(k_prompt, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     enc = None
     if cfg.is_encdec:
-        enc = jax.random.normal(key, (args.batch, cfg.encoder_seq,
-                                      cfg.d_model)) * 0.1
+        enc = jax.random.normal(k_enc, (args.batch, cfg.encoder_seq,
+                                        cfg.d_model)) * 0.1
 
     t0 = time.time()
     logits, cache = L.prefill(params, cfg, prompts, cache_len=args.cache_len,

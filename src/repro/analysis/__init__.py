@@ -1,0 +1,37 @@
+"""JAX-native static analysis + runtime sanitizers for the repro codebase.
+
+Every PR so far hand-fixed an instance of the same JAX hazard classes:
+module-level import cycles (PR 3), silent retraces of per-round re-solves
+(PR 3/4), PRNG stream-order audits to keep runs bit-exact (PR 2/5), and
+host syncs hiding on eval paths.  This package turns those one-off
+defenses into standing, CI-enforced rules:
+
+* :mod:`repro.analysis.rules` + :mod:`repro.analysis.linter` — an
+  AST-based linter (``python -m repro.analysis lint src/``) with
+  JAX-specific rules (RPA001-RPA008) distilled from the repo's own bug
+  history, inline ``# repro: noqa(RULE)`` suppression, and a self-test
+  corpus of known-bad/known-good snippets
+  (``python -m repro.analysis selftest``).
+* :mod:`repro.analysis.sanitize` — runtime companions: a
+  compile-count/retrace guard over ``jax.monitoring`` events
+  (:class:`CompileMonitor`, the ``assert_no_retrace`` pytest fixture in
+  :mod:`repro.analysis.pytest_plugin`), a PRNG-key-reuse detector, and
+  NaN/Inf checks — all switched on end-to-end by
+  ``EngineOptions(sanitize=True)``.
+
+See ``docs/static_analysis.md`` for the rule catalogue and the PR-1..5
+incidents that motivated each rule.
+"""
+from repro.analysis.linter import (Finding, lint_paths, lint_project,
+                                   lint_source, render_findings)
+from repro.analysis.rules import RULES, Rule
+from repro.analysis.sanitize import (CompileMonitor, KeyReuseDetector,
+                                     SanitizerError, check_finite,
+                                     compile_counts, no_retrace)
+
+__all__ = [
+    "Finding", "lint_paths", "lint_project", "lint_source",
+    "render_findings", "RULES", "Rule",
+    "CompileMonitor", "KeyReuseDetector", "SanitizerError",
+    "check_finite", "compile_counts", "no_retrace",
+]

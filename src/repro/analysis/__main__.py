@@ -1,0 +1,107 @@
+"""CLI: ``python -m repro.analysis <command>``.
+
+Commands:
+
+* ``lint PATHS...`` — run the JAX lint rules over files/directories.
+  Exit 0 when clean (suppressions honored), 1 when findings remain.
+  ``--json`` for machine-readable output, ``--out FILE`` to also write
+  the report to a file (the CI artifact), ``--select RPA001,RPA004`` to
+  restrict rules, ``--no-hints`` for compact output.
+* ``selftest`` — run every rule against its known-bad/known-good corpus
+  (:mod:`repro.analysis.corpus`); exit 1 on any miss.  This is the
+  linter's own tier-1 gate in CI.
+* ``rules`` — print the rule catalogue.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.corpus import CORPUS, CYCLE_CORPUS
+from repro.analysis.linter import (lint_paths, lint_project, lint_source,
+                                   render_findings)
+from repro.analysis.rules import RULES
+
+
+def _cmd_lint(args) -> int:
+    select = args.select.split(",") if args.select else None
+    findings = lint_paths(args.paths, select=select)
+    report = render_findings(findings,
+                             fmt="json" if args.json else "text",
+                             hints=not args.no_hints)
+    print(report)
+    if args.out:
+        parent = os.path.dirname(args.out)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(report + "\n")
+    return 1 if findings else 0
+
+
+def _cmd_selftest(_args) -> int:
+    failures = []
+    for code, cases in sorted(CORPUS.items()):
+        for kind in ("bad", "good"):
+            for i, snippet in enumerate(cases.get(kind, [])):
+                hits = {f.code for f in lint_source(snippet)}
+                if kind == "bad" and code not in hits:
+                    failures.append(f"{code} bad[{i}]: expected a "
+                                    f"{code} finding, got {sorted(hits)}")
+                elif kind == "good" and code in hits:
+                    failures.append(f"{code} good[{i}]: unexpected "
+                                    f"{code} finding")
+    for name, case in sorted(CYCLE_CORPUS.items()):
+        hits = {f.code for f in lint_project(case["files"],
+                                             select=["RPA007"])}
+        if case["expect"] and "RPA007" not in hits:
+            failures.append(f"RPA007 {name}: expected a cycle finding")
+        elif not case["expect"] and "RPA007" in hits:
+            failures.append(f"RPA007 {name}: unexpected cycle finding")
+    n_bad = sum(len(c.get("bad", [])) for c in CORPUS.values())
+    n_good = sum(len(c.get("good", [])) for c in CORPUS.values())
+    if failures:
+        print("\n".join(failures))
+        print(f"selftest FAILED: {len(failures)} corpus miss(es)")
+        return 1
+    print(f"selftest OK: {n_bad} known-bad + {n_good} known-good "
+          f"snippets, {len(CYCLE_CORPUS)} cycle corpora, "
+          f"{len(RULES) - 1} rules")
+    return 0
+
+
+def _cmd_rules(_args) -> int:
+    for code, rule in sorted(RULES.items()):
+        if code == "RPA000":
+            continue
+        print(f"{code} [{rule.name}]\n    {rule.summary}\n"
+              f"    hint: {rule.hint}")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-native static analysis for the repro codebase")
+    sub = parser.add_subparsers(dest="command", required=True)
+    p_lint = sub.add_parser("lint", help="lint files/directories")
+    p_lint.add_argument("paths", nargs="+")
+    p_lint.add_argument("--json", action="store_true")
+    p_lint.add_argument("--out", default=None,
+                        help="also write the report to this file")
+    p_lint.add_argument("--select", default=None,
+                        help="comma-separated rule codes to run")
+    p_lint.add_argument("--no-hints", action="store_true")
+    p_lint.set_defaults(fn=_cmd_lint)
+    p_self = sub.add_parser("selftest",
+                            help="check every rule against its corpus")
+    p_self.set_defaults(fn=_cmd_selftest)
+    p_rules = sub.add_parser("rules", help="print the rule catalogue")
+    p_rules.set_defaults(fn=_cmd_rules)
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,447 @@
+"""Known-bad / known-good snippet corpus: the executable spec of every
+lint rule.
+
+``python -m repro.analysis selftest`` (and tests/test_analysis.py)
+asserts that each ``bad`` snippet triggers its rule and each ``good``
+snippet does not.  When a rule's heuristic changes, this corpus is what
+must keep passing — add a snippet here for every false positive/negative
+found in the wild before changing the rule.
+
+RPA007 (import cycles) is cross-module: its corpus entries are
+``{path: source}`` file sets instead of single sources.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+# Single-module snippets: rule code -> {"bad": [...], "good": [...]}.
+# Every snippet is a complete module.
+CORPUS: Dict[str, Dict[str, List[str]]] = {
+    "RPA001": {
+        "bad": [
+            # the classic: one key, two draws
+            """
+import jax
+
+def sample(key):
+    a = jax.random.normal(key, (3,))
+    b = jax.random.uniform(key, (3,))
+    return a + b
+""",
+            # reuse across loop iterations: key defined outside the loop
+            """
+import jax
+
+def rollout(key, steps):
+    out = []
+    for _ in range(steps):
+        out.append(jax.random.normal(key, ()))
+    return out
+""",
+            # consumed by split, then consumed again by a draw
+            """
+import jax
+
+def draw(key):
+    key2, sub = jax.random.split(key)
+    noise = jax.random.normal(key, (4,))
+    return noise, sub
+""",
+        ],
+        "good": [
+            # split-then-consume, each subkey once
+            """
+import jax
+
+def sample(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (3,))
+    b = jax.random.uniform(k2, (3,))
+    return a + b
+""",
+            # fresh key per iteration via reassignment
+            """
+import jax
+
+def rollout(key, steps):
+    out = []
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        out.append(jax.random.normal(sub, ()))
+    return out
+""",
+            # one consumption per branch is not a reuse
+            """
+import jax
+
+def draw(key, gaussian):
+    if gaussian:
+        return jax.random.normal(key, ())
+    else:
+        return jax.random.uniform(key, ())
+""",
+            # per-element keys from an indexed array are fresh
+            """
+import jax
+
+def draws(key, n):
+    keys = jax.random.split(key, n)
+    return [jax.random.normal(keys[i], ()) for i in range(n)]
+""",
+        ],
+    },
+    "RPA002": {
+        "bad": [
+            """
+import jax
+
+def advance(key):
+    jax.random.split(key)
+    return jax.random.normal(key, ())
+""",
+            """
+import jax
+
+def advance(key):
+    _ = jax.random.split(key)
+    return key
+""",
+        ],
+        "good": [
+            """
+import jax
+
+def advance(key):
+    key, sub = jax.random.split(key)
+    return jax.random.normal(sub, ())
+""",
+        ],
+    },
+    "RPA003": {
+        "bad": [
+            # float() of a traced reduction inside a jitted function
+            """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def loss(x):
+    return float(jnp.mean(x ** 2))
+""",
+            # .item() inside a scan body
+            """
+import jax
+import jax.numpy as jnp
+
+def run(xs):
+    def body(carry, x):
+        carry = carry + x.item()
+        return carry, carry
+    return jax.lax.scan(body, 0.0, xs)
+""",
+            # np.asarray materializes the tracer on host
+            """
+import jax
+import numpy as np
+
+@jax.jit
+def norm(x):
+    return np.asarray(x).sum()
+""",
+        ],
+        "good": [
+            # float() of a static scalar argument is fine
+            """
+import jax
+import functools
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def scaled(x, scale):
+    return x * float(scale)
+""",
+            # host conversion outside the jitted scope
+            """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def loss(x):
+    return jnp.mean(x ** 2)
+
+def eval_loss(x):
+    return float(loss(x))
+""",
+        ],
+    },
+    "RPA004": {
+        "bad": [
+            """
+import jax
+
+@jax.jit
+def relu(x):
+    if x > 0:
+        return x
+    return 0.0
+""",
+            # while on a traced value inside a jitted helper
+            """
+import jax
+
+@jax.jit
+def drain(x):
+    while x > 0:
+        x = x - 1
+    return x
+""",
+        ],
+        "good": [
+            # branching on shape/ndim is static under jit
+            """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def maybe_flatten(x):
+    if x.ndim > 2:
+        return x.reshape(x.shape[0], -1)
+    return x
+""",
+            # branching on a static argument
+            """
+import jax
+import functools
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def act(x, mode):
+    if mode == "relu":
+        return jax.numpy.maximum(x, 0)
+    return x
+""",
+            # lax.cond is the traced-friendly branch
+            """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def relu(x):
+    return jnp.where(x > 0, x, 0.0)
+""",
+            # `is None` dispatch on an optional arg is static
+            """
+import jax
+
+@jax.jit
+def shift(x, offset=None):
+    if offset is None:
+        return x
+    return x + offset
+""",
+        ],
+    },
+    "RPA005": {
+        "bad": [
+            # mutable default on a jitted function
+            """
+import jax
+
+@jax.jit
+def apply(x, dims=[0, 1]):
+    return x.sum()
+""",
+            # mutable value bound via partial under jit
+            """
+import jax
+import functools
+
+def f(cfg, x):
+    return x * cfg["scale"]
+
+g = jax.jit(functools.partial(f, {"scale": 2.0}))
+""",
+        ],
+        "good": [
+            # hashable tuple default
+            """
+import jax
+import functools
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def apply(x, dims=(0, 1)):
+    return x.sum(dims)
+""",
+            # partial binding a hashable scalar
+            """
+import jax
+import functools
+
+def f(scale, x):
+    return x * scale
+
+g = jax.jit(functools.partial(f, 2.0))
+""",
+        ],
+    },
+    "RPA006": {
+        "bad": [
+            """
+import dataclasses
+import jax
+
+
+@dataclasses.dataclass
+class State:
+    x: object
+    step: int
+
+
+@jax.jit
+def advance(state):
+    return state
+
+
+def main(x):
+    return advance(State(x=x, step=0))
+""",
+        ],
+        "good": [
+            # registered via register_dataclass
+            """
+import dataclasses
+import jax
+
+
+@dataclasses.dataclass
+class State:
+    x: object
+    step: int
+
+
+jax.tree_util.register_dataclass(
+    State, data_fields=["x"], meta_fields=["step"])
+
+
+@jax.jit
+def advance(state):
+    return state
+
+
+def main(x):
+    return advance(State(x=x, step=0))
+""",
+            # frozen dataclass: hashable, usable as a static arg
+            """
+import dataclasses
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    eta: float
+
+
+@jax.jit
+def advance(x, hyper):
+    return x * hyper.eta
+
+
+def main(x):
+    return advance(x, Hyper(eta=0.1))
+""",
+        ],
+    },
+    "RPA008": {
+        "bad": [
+            # np reduction on a traced value
+            """
+import jax
+import numpy as np
+
+@jax.jit
+def mean_loss(x):
+    return np.mean(x ** 2)
+""",
+            # np inside a vmapped helper
+            """
+import jax
+import numpy as np
+
+def per_row(x):
+    return np.clip(x, 0.0, 1.0)
+
+batched = jax.vmap(per_row)
+""",
+        ],
+        "good": [
+            # jnp on traced values
+            """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def mean_loss(x):
+    return jnp.mean(x ** 2)
+""",
+            # np on host-side static values inside a jitted scope
+            """
+import jax
+import numpy as np
+
+@jax.jit
+def pad_to(x):
+    width = np.maximum(8, x.shape[0])
+    return x.sum() + width
+""",
+            # np use outside any traced scope
+            """
+import numpy as np
+
+def host_stats(x):
+    return np.mean(x), np.std(x)
+""",
+        ],
+    },
+}
+
+# Cross-module corpora for RPA007: name -> {"files": {...}, "expect": bool}
+CYCLE_CORPUS: Dict[str, dict] = {
+    "two_module_cycle": {
+        "expect": True,
+        "files": {
+            "src/repro/pkg_a/__init__.py": "",
+            "src/repro/pkg_a/alpha.py":
+                "from repro.pkg_a.beta import helper\n\n"
+                "def entry():\n    return helper()\n",
+            "src/repro/pkg_a/beta.py":
+                "import repro.pkg_a.alpha\n\n"
+                "def helper():\n    return repro.pkg_a.alpha\n",
+        },
+    },
+    "type_checking_guard_is_fine": {
+        "expect": False,
+        "files": {
+            "src/repro/pkg_b/__init__.py": "",
+            "src/repro/pkg_b/alpha.py":
+                "from typing import TYPE_CHECKING\n\n"
+                "if TYPE_CHECKING:\n"
+                "    from repro.pkg_b.beta import Helper\n\n"
+                "def entry(h):\n    return h\n",
+            "src/repro/pkg_b/beta.py":
+                "from repro.pkg_b.alpha import entry\n\n"
+                "class Helper:\n    run = staticmethod(entry)\n",
+        },
+    },
+    "function_local_import_is_fine": {
+        "expect": False,
+        "files": {
+            "src/repro/pkg_c/__init__.py": "",
+            "src/repro/pkg_c/alpha.py":
+                "def entry():\n"
+                "    from repro.pkg_c.beta import helper\n"
+                "    return helper()\n",
+            "src/repro/pkg_c/beta.py":
+                "from repro.pkg_c.alpha import entry\n\n"
+                "def helper():\n    return entry\n",
+        },
+    },
+}

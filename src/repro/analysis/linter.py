@@ -1,0 +1,189 @@
+"""Linter driver: file walking, noqa suppression, rendering, exit codes.
+
+Entry points:
+
+* :func:`lint_paths` — lint files/directories on disk (what the CLI and
+  the CI ``analysis`` job call).
+* :func:`lint_project` — lint an in-memory ``{path: source}`` mapping
+  (what the self-test corpus uses; also enables the import-cycle rule on
+  synthetic file sets).
+* :func:`lint_source` — one in-memory module (single-module rules only).
+
+Suppression: ``# repro: noqa(RPA003)`` on the offending line silences
+that rule there; ``# repro: noqa(RPA003,RPA008)`` silences several; a
+bare ``# repro: noqa`` silences every rule on the line.  Suppressions
+are expected to carry a one-line justification in the same comment.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.analysis.rules import (RULES, RawFinding, find_cycles,
+                                  import_edges, module_findings)
+
+_NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa(?:\(\s*([A-Z0-9,\s]+?)\s*\))?", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation, ready to render."""
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    @property
+    def hint(self) -> str:
+        return RULES[self.code].hint
+
+    def render(self, *, hints: bool = True) -> str:
+        base = f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"{self.code} [{RULES[self.code].name}] {self.message}"
+        return f"{base}\n    hint: {self.hint}" if hints else base
+
+    def to_json(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "code": self.code, "rule": RULES[self.code].name,
+                "message": self.message, "hint": self.hint}
+
+
+def _noqa_codes(source_line: str) -> Optional[set]:
+    """Codes suppressed on this line; empty set means 'all'."""
+    m = _NOQA_RE.search(source_line)
+    if not m:
+        return None
+    if m.group(1) is None:
+        return set()
+    return {c.strip().upper() for c in m.group(1).split(",") if c.strip()}
+
+
+def _suppressed(finding: RawFinding, lines: Sequence[str]) -> bool:
+    if 1 <= finding.line <= len(lines):
+        codes = _noqa_codes(lines[finding.line - 1])
+        if codes is not None and (not codes or finding.code in codes):
+            return True
+    return False
+
+
+def _module_name(path: str, package: str = "repro") -> Optional[str]:
+    """Map ``.../src/repro/core/engine.py`` -> ``repro.core.engine``."""
+    parts = os.path.normpath(path).split(os.sep)
+    if package not in parts:
+        return None
+    rel = parts[parts.index(package):]
+    if rel[-1].endswith(".py"):
+        rel[-1] = rel[-1][:-3]
+    if rel[-1] == "__init__":
+        rel = rel[:-1]
+    return ".".join(rel)
+
+
+def lint_project(files: Dict[str, str], *,
+                 select: Optional[Iterable[str]] = None,
+                 package: str = "repro") -> List[Finding]:
+    """Lint a ``{path: source}`` mapping: per-module rules plus the
+    cross-module import-cycle rule (RPA007)."""
+    wanted = set(select) if select is not None else set(RULES)
+    findings: List[Finding] = []
+    trees: Dict[str, ast.Module] = {}
+    lines: Dict[str, List[str]] = {}
+    for path, source in sorted(files.items()):
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            findings.append(Finding(path, e.lineno or 1, 0, "RPA000",
+                                    f"syntax error: {e.msg}"))
+            continue
+        trees[path] = tree
+        lines[path] = source.splitlines()
+        for raw in module_findings(tree):
+            if raw.code in wanted and not _suppressed(raw, lines[path]):
+                findings.append(Finding(path, raw.line, raw.col,
+                                        raw.code, raw.message))
+    if "RPA007" in wanted:
+        findings.extend(_cycle_findings(trees, lines, package))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return findings
+
+
+def _cycle_findings(trees: Dict[str, ast.Module],
+                    lines: Dict[str, List[str]],
+                    package: str) -> List[Finding]:
+    mod_of_path: Dict[str, str] = {}
+    for path in trees:
+        mod = _module_name(path, package)
+        if mod:
+            mod_of_path[path] = mod
+    known = set(mod_of_path.values())
+    # also count packages (repro.core -> repro/core/__init__.py)
+    graph: Dict[str, Dict[str, int]] = {}
+    path_of_mod = {m: p for p, m in mod_of_path.items()}
+    for path, mod in mod_of_path.items():
+        edges: Dict[str, int] = {}
+        for target, line in import_edges(mod, trees[path], known):
+            if target != mod and target not in edges:
+                edges[target] = line
+        graph[mod] = edges
+    out: List[Finding] = []
+    for members, line_of in find_cycles(graph):
+        for mod in members:
+            path = path_of_mod.get(mod)
+            line = line_of.get(mod)
+            if path is None or line is None:
+                continue
+            raw = RawFinding(line, 0, "RPA007",
+                             f"module-level import cycle: "
+                             f"{' -> '.join(members + [members[0]])}")
+            if not _suppressed(raw, lines[path]):
+                out.append(Finding(path, raw.line, raw.col, raw.code,
+                                   raw.message))
+    return out
+
+
+def lint_source(source: str, path: str = "<string>", *,
+                select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint one in-memory module (no cross-module rules)."""
+    wanted = set(select) if select is not None else set(RULES) - {"RPA007"}
+    return lint_project({path: source}, select=wanted)
+
+
+def _iter_py_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for name in sorted(names):
+                    if name.endswith(".py"):
+                        out.append(os.path.join(root, name))
+        elif p.endswith(".py"):
+            out.append(p)
+    return out
+
+
+def lint_paths(paths: Sequence[str], *,
+               select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint files/directories on disk (the CLI entry point)."""
+    files: Dict[str, str] = {}
+    for path in _iter_py_files(paths):
+        with open(path, encoding="utf-8") as f:
+            files[path] = f.read()
+    return lint_project(files, select=select)
+
+
+def render_findings(findings: List[Finding], *, fmt: str = "text",
+                    hints: bool = True) -> str:
+    if fmt == "json":
+        return json.dumps([f.to_json() for f in findings], indent=2)
+    parts = [f.render(hints=hints) for f in findings]
+    parts.append(f"{len(findings)} finding(s)"
+                 if findings else "clean: 0 findings")
+    return "\n".join(parts)

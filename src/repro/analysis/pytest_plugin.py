@@ -1,0 +1,48 @@
+"""Pytest plumbing for the runtime sanitizers.
+
+Loaded via ``pytest_plugins = ("repro.analysis.pytest_plugin",)`` in the
+root conftest.  Provides:
+
+* ``assert_no_retrace`` — a fixture returning the
+  :func:`repro.analysis.sanitize.no_retrace` context-manager factory,
+  pre-labelled with the test name::
+
+      def test_warm_path(assert_no_retrace):
+          run_once()                      # warmup: compiles are fine
+          with assert_no_retrace():
+              run_once()                  # must hit every cache
+
+  The generalized form of the PR-3 ("NetView never retraces") and PR-4
+  (evolved-network no-retrace) bespoke tests: instead of watching one
+  module's jit cache, it counts actual XLA backend compiles
+  process-wide, so any accidental retrace — solver, kernels, eval —
+  fails the test.
+* ``compile_monitor`` — a bare :class:`CompileMonitor` factory for
+  tests that want counts without the assertion.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import pytest
+
+from repro.analysis.sanitize import CompileMonitor, no_retrace
+
+
+@pytest.fixture
+def assert_no_retrace(request):
+    """Factory for ``with assert_no_retrace(allow_compiles=0): ...``."""
+    return functools.partial(no_retrace, f"test {request.node.name}")
+
+
+@pytest.fixture
+def compile_monitor():
+    """Factory for ``with compile_monitor() as mon: ...`` (no assert)."""
+
+    @contextlib.contextmanager
+    def make():
+        with CompileMonitor() as mon:
+            yield mon
+
+    return make

@@ -1,0 +1,238 @@
+"""Runtime sanitizers: retrace guard, PRNG-key-reuse detector, NaN/Inf.
+
+The static linter (:mod:`repro.analysis.rules`) catches what an AST can
+see; this module catches what only a run can:
+
+* :class:`CompileMonitor` / :func:`no_retrace` — count actual XLA
+  compilations and jaxpr traces through ``jax.monitoring`` events.  One
+  module-level listener increments global counters (registered once,
+  never unregistered — listener APIs differ across jax versions);
+  monitors snapshot the counters, so nesting is free.  This generalizes
+  the PR-3/PR-4 bespoke ``sca.jit_cache_size()`` probes: the event
+  counter sees EVERY jit cache in the process, not one module's.
+* :class:`KeyReuseDetector` — wraps the consuming ``jax.random``
+  functions and records every concrete (host-side) key that passes
+  through; consuming the same key twice raises.  Traced keys are
+  skipped: inside a jit the static rule (RPA001) is the defense.
+* :func:`check_finite` — NaN/Inf sweep over a pytree / ParamPlane.
+
+``EngineOptions(sanitize=True)`` turns all three on for a run (see
+``repro.core.engine``); the ``assert_no_retrace`` pytest fixture
+(:mod:`repro.analysis.pytest_plugin`) exposes the retrace guard to
+tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+
+class SanitizerError(AssertionError):
+    """A runtime sanitizer tripped (key reuse, NaN/Inf, retrace)."""
+
+
+# ------------------------------------------------- compile monitoring --
+
+_BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+
+_counts_lock = threading.Lock()
+_COUNTS: Dict[str, int] = {"backend_compile": 0, "jaxpr_trace": 0}
+_LISTENER_REGISTERED = False
+
+
+def _on_event_duration(event: str, duration: float, **_kw) -> None:
+    if event == _BACKEND_COMPILE_EVENT:
+        with _counts_lock:
+            _COUNTS["backend_compile"] += 1
+    elif event == _TRACE_EVENT:
+        with _counts_lock:
+            _COUNTS["jaxpr_trace"] += 1
+
+
+def _ensure_listener() -> None:
+    global _LISTENER_REGISTERED
+    if not _LISTENER_REGISTERED:
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_event_duration)
+        _LISTENER_REGISTERED = True
+
+
+def compile_counts() -> Dict[str, int]:
+    """Process-lifetime counters of backend compiles / jaxpr traces."""
+    _ensure_listener()
+    with _counts_lock:
+        return dict(_COUNTS)
+
+
+@dataclasses.dataclass
+class CompileMonitor:
+    """Counts backend compiles / jaxpr traces inside a ``with`` block.
+
+    >>> with CompileMonitor() as mon:
+    ...     f(x)                      # warm call
+    >>> mon.compiles, mon.traces
+    (0, 0)
+
+    ``compiles`` is the number of XLA backend compilations — the
+    expensive event a no-retrace guarantee pins to zero.  ``traces``
+    counts jaxpr traces, which also fire for cache-hitting wrappers
+    (e.g. new closures over the same computation), so it is reported
+    for diagnostics but not asserted on by default.
+    """
+    compiles: int = 0
+    traces: int = 0
+    _start: Optional[Dict[str, int]] = None
+
+    def __enter__(self) -> "CompileMonitor":
+        self._start = compile_counts()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.refresh()
+
+    def refresh(self) -> "CompileMonitor":
+        now = compile_counts()
+        assert self._start is not None, "monitor not entered"
+        self.compiles = now["backend_compile"] - \
+            self._start["backend_compile"]
+        self.traces = now["jaxpr_trace"] - self._start["jaxpr_trace"]
+        return self
+
+
+@contextlib.contextmanager
+def no_retrace(what: str = "block", *, allow_compiles: int = 0):
+    """Assert that a block triggers no (or at most ``allow_compiles``)
+    XLA backend compilations — the post-warmup no-retrace contract.
+
+    Raises :class:`SanitizerError` naming the offending block; yields
+    the :class:`CompileMonitor` for extra assertions.
+    """
+    with CompileMonitor() as mon:
+        yield mon
+    mon.refresh()
+    if mon.compiles > allow_compiles:
+        raise SanitizerError(
+            f"{what}: {mon.compiles} backend compile(s) "
+            f"(allowed {allow_compiles}), {mon.traces} jaxpr trace(s) — "
+            f"a warm path retraced; check for changing static args, "
+            f"weak-type flips, or unhashed cache keys")
+
+
+# ---------------------------------------------- PRNG reuse detection --
+
+# jax.random functions that consume a key as their first argument
+_CONSUMING_FNS = (
+    "split", "fold_in", "bits", "uniform", "normal", "bernoulli",
+    "randint", "choice", "permutation", "categorical", "gumbel",
+    "truncated_normal", "laplace", "exponential", "gamma", "beta",
+    "dirichlet", "poisson", "rademacher", "cauchy", "logistic",
+)
+
+
+def _concrete_key_bytes(key) -> Optional[bytes]:
+    """Stable bytes of a concrete key; None for tracers / non-keys."""
+    if isinstance(key, jax.core.Tracer):
+        return None
+    try:
+        arr = np.asarray(key)
+    except Exception:
+        return None
+    if arr.dtype == np.uint32 and arr.ndim == 1 and arr.size in (2, 4):
+        return arr.tobytes()
+    if arr.dtype.kind == "V" or str(arr.dtype).startswith("key"):
+        # typed PRNG keys: go through the raw key data
+        try:
+            return np.asarray(jax.random.key_data(key)).tobytes()
+        except Exception:
+            return None
+    return None
+
+
+class KeyReuseDetector:
+    """Context manager: raise (or record) when one concrete PRNG key is
+    consumed by two ``jax.random`` calls.
+
+    >>> with KeyReuseDetector():
+    ...     k = jax.random.PRNGKey(0)
+    ...     jax.random.normal(k, ())
+    ...     jax.random.uniform(k, ())      # raises SanitizerError
+
+    ``mode="record"`` collects ``.reuses`` instead of raising (the
+    engine's sanitize report path).  Detection is host-side only: keys
+    that are tracers (inside jit/vmap) are skipped — the static rule
+    RPA001 covers those.
+    """
+
+    def __init__(self, mode: str = "raise"):
+        assert mode in ("raise", "record")
+        self.mode = mode
+        self.reuses: list = []
+        self._seen: Dict[bytes, str] = {}
+        self._originals: Dict[str, object] = {}
+
+    def _wrap(self, name: str, fn):
+        detector = self
+
+        def wrapped(*args, **kwargs):
+            key = args[0] if args else kwargs.get("key")
+            kb = _concrete_key_bytes(key) if key is not None else None
+            if kb is not None:
+                prev = detector._seen.get(kb)
+                if prev is not None:
+                    reuse = (f"PRNG key consumed twice: jax.random.{name} "
+                             f"got a key already consumed by "
+                             f"jax.random.{prev}")
+                    detector.reuses.append(reuse)
+                    if detector.mode == "raise":
+                        raise SanitizerError(
+                            reuse + " — split the key and consume each "
+                            "subkey exactly once")
+                else:
+                    detector._seen[kb] = name
+            return fn(*args, **kwargs)
+
+        wrapped.__name__ = getattr(fn, "__name__", name)
+        return wrapped
+
+    def __enter__(self) -> "KeyReuseDetector":
+        for name in _CONSUMING_FNS:
+            fn = getattr(jax.random, name, None)
+            if fn is not None and name not in self._originals:
+                self._originals[name] = fn
+                setattr(jax.random, name, self._wrap(name, fn))
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for name, fn in self._originals.items():
+            setattr(jax.random, name, fn)
+        self._originals.clear()
+
+
+# --------------------------------------------------------- NaN / Inf --
+
+def check_finite(tree, what: str = "value") -> None:
+    """Raise :class:`SanitizerError` if any array leaf has NaN/Inf.
+
+    Accepts pytrees and ParamPlane (a registered pytree).  One fused
+    reduction per leaf; the host sync happens only in sanitize mode, by
+    design — this is a debugging net, not a hot path.
+    """
+    import jax.numpy as jnp
+    bad = []
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    for i, leaf in enumerate(leaves):
+        if not hasattr(leaf, "dtype") or not np.issubdtype(
+                np.dtype(leaf.dtype), np.floating):
+            continue
+        if not bool(jnp.isfinite(leaf).all()):
+            bad.append(i)
+    if bad:
+        raise SanitizerError(
+            f"{what}: non-finite values in leaf indices {bad} — enable "
+            f"jax_debug_nans or bisect the round to locate the source")

@@ -59,6 +59,12 @@ class EngineOptions:
                                     # t % eval_every == 0 and the last
                                     # round; off-cadence rounds carry the
                                     # last measured accuracy forward
+    sanitize: bool = False          # runtime sanitizer (repro.analysis):
+                                    # NaN/Inf check on the aggregated
+                                    # params each round + host-level PRNG
+                                    # key-reuse detection across the loop.
+                                    # Debug aid — adds a device sync per
+                                    # round, keep off in benchmarks
 
 
 @dataclasses.dataclass(frozen=True)

@@ -546,6 +546,12 @@ class Engine:
             aggregator_moved=(state.prev_agg is not None
                               and plan.aggregator != state.prev_agg),
             active_ues=int(staged.events.active_ues))
+        if self.opts.sanitize:
+            # deferred import: the analysis package is a debug dependency,
+            # not part of the engine's import-time surface
+            from repro.analysis.sanitize import check_finite
+            check_finite(state.params,
+                         f"params after round {staged.t}")
         state.prev_agg = plan.aggregator
         state.reports.append(report)
         for cb in self.callbacks:
@@ -567,7 +573,21 @@ class Engine:
         return self.run_loop(state, online_datasets)
 
     def run_loop(self, state: LoopState, online_datasets) -> RunResult:
-        """Drive an (initialized or resumed) LoopState to completion."""
+        """Drive an (initialized or resumed) LoopState to completion.
+
+        With ``opts.sanitize`` the whole loop runs under the
+        :class:`repro.analysis.sanitize.KeyReuseDetector`: any host-level
+        ``jax.random`` call that consumes an already-consumed key raises,
+        and :meth:`finish_round` additionally checks the aggregated
+        params for NaN/Inf every round.
+        """
+        if self.opts.sanitize:
+            from repro.analysis.sanitize import KeyReuseDetector
+            with KeyReuseDetector(mode="raise"):
+                return self._run_loop(state, online_datasets)
+        return self._run_loop(state, online_datasets)
+
+    def _run_loop(self, state: LoopState, online_datasets) -> RunResult:
         while state.t < self.opts.rounds and not state.stopped:
             staged = self.begin_round(state, online_datasets)
             state.params, mean_loss = self.executor.run_round(

@@ -49,7 +49,7 @@ def a_l1(gamma, eta, mu):
     """||a_i||_1 = sum_l (1-eta*mu)^(gamma-1-l), traced-gamma safe."""
     r = 1.0 - eta * mu
     g = gamma.astype(jnp.float32)
-    if abs(r - 1.0) < 1e-12:
+    if abs(r - 1.0) < 1e-12:    # repro: noqa(RPA004) eta/mu are Python scalars baked from CEFLHyper; only gamma is traced
         return g
     return (1.0 - jnp.exp(g * jnp.log(r))) / (1.0 - r)
 

@@ -115,6 +115,7 @@ class EngineSpec:
     m_default: float = 0.5
     rate_jitter: float = 0.15
     eval_every: int = 1
+    sanitize: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,7 +148,7 @@ class ExperimentSpec:
             solver_backend=e.solver_backend,
             gamma_default=e.gamma_default, m_default=e.m_default,
             rate_jitter=e.rate_jitter, seed=int(seed),
-            eval_every=e.eval_every)
+            eval_every=e.eval_every, sanitize=e.sanitize)
 
     @property
     def run_seeds(self) -> Tuple[int, ...]:

@@ -41,9 +41,9 @@ ROWS = 256           # max rows per tile (multiple of 8)
 
 def row_tile(r: int, cap: int = ROWS) -> int:
     """Largest power-of-two multiple of 8 dividing ``r`` (<= cap)."""
-    assert r % 8 == 0, r
+    assert r % 8 == 0, r    # repro: noqa(RPA004) r is a static row count (plane shape), never a tracer
     t = 8
-    while t * 2 <= cap and r % (t * 2) == 0:
+    while t * 2 <= cap and r % (t * 2) == 0:    # repro: noqa(RPA004) static tile-size arithmetic on concrete ints
         t *= 2
     return t
 

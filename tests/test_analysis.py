@@ -1,0 +1,288 @@
+"""repro.analysis: linter rules vs their corpus, noqa suppression, the
+CLI, the runtime sanitizers (compile monitor, key-reuse detector,
+NaN/Inf), EngineOptions.sanitize, and the repo-wide acceptance gates —
+`lint src/` stays clean and a warmed 5-round campus_walk run triggers
+zero XLA recompiles."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import __main__ as cli
+from repro.analysis.corpus import CORPUS, CYCLE_CORPUS
+from repro.analysis.linter import (lint_paths, lint_project, lint_source,
+                                   render_findings)
+from repro.analysis.rules import RULES
+from repro.analysis.sanitize import (CompileMonitor, KeyReuseDetector,
+                                     SanitizerError, check_finite,
+                                     no_retrace)
+
+# ------------------------------------------------------------- rules ----
+
+
+def test_every_rule_has_bad_and_good_corpus():
+    """Acceptance: each rule ships >= 1 failing and >= 1 passing case."""
+    for code in RULES:
+        if code in ("RPA000", "RPA007"):      # syntax / cycle: own corpora
+            continue
+        assert CORPUS[code]["bad"], code
+        assert CORPUS[code]["good"], code
+    assert CYCLE_CORPUS                       # RPA007 has cycle corpora
+
+
+@pytest.mark.parametrize("code", sorted(c for c in RULES
+                                        if c not in ("RPA000", "RPA007")))
+def test_rule_corpus(code):
+    """Every known-bad snippet trips exactly its rule; known-good don't."""
+    for i, snippet in enumerate(CORPUS[code]["bad"]):
+        hits = {f.code for f in lint_source(snippet)}
+        assert code in hits, f"{code} bad[{i}] missed: got {sorted(hits)}"
+    for i, snippet in enumerate(CORPUS[code]["good"]):
+        hits = {f.code for f in lint_source(snippet)}
+        assert code not in hits, f"{code} good[{i}] false positive"
+
+
+def test_cycle_corpus():
+    for name, case in CYCLE_CORPUS.items():
+        hits = {f.code for f in lint_project(case["files"],
+                                             select=["RPA007"])}
+        assert ("RPA007" in hits) == case["expect"], name
+
+
+def test_syntax_error_becomes_finding():
+    fs = lint_source("def broken(:\n    pass\n", path="x.py")
+    assert [f.code for f in fs] == ["RPA000"]
+    assert fs[0].path == "x.py"
+
+
+def test_noqa_suppression():
+    bad = ("import jax\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    if x > 0:{noqa}\n"
+           "        return x\n"
+           "    return -x\n")
+    assert any(f.code == "RPA004"
+               for f in lint_source(bad.format(noqa="")))
+    # rule-coded and bare suppressions both silence the line
+    assert not lint_source(bad.format(noqa="  # repro: noqa(RPA004)"))
+    assert not lint_source(bad.format(noqa="  # repro: noqa"))
+    # a different code does NOT suppress
+    assert lint_source(bad.format(noqa="  # repro: noqa(RPA001)"))
+
+
+def test_findings_render_text_and_json():
+    fs = lint_source("import jax\n"
+                     "k = jax.random.PRNGKey(0)\n"
+                     "a = jax.random.normal(k, (2,))\n"
+                     "b = jax.random.uniform(k, (2,))\n", path="m.py")
+    assert [f.code for f in fs] == ["RPA001"]
+    txt = render_findings(fs)
+    assert "m.py:4" in txt and "RPA001" in txt and "hint:" in txt
+    recs = json.loads(render_findings(fs, fmt="json"))
+    assert recs[0]["code"] == "RPA001" and recs[0]["line"] == 4
+
+
+# --------------------------------------------------------------- cli ----
+
+
+def test_cli_selftest_and_rules(capsys):
+    assert cli.main(["selftest"]) == 0
+    assert "selftest OK" in capsys.readouterr().out
+    assert cli.main(["rules"]) == 0
+    out = capsys.readouterr().out
+    for code in RULES:
+        if code != "RPA000":
+            assert code in out
+
+
+def test_cli_lint_exit_codes_and_artifact(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n"
+                   "k = jax.random.PRNGKey(0)\n"
+                   "a = jax.random.normal(k, (2,))\n"
+                   "b = jax.random.uniform(k, (2,))\n")
+    good = tmp_path / "good.py"
+    good.write_text("import jax\n"
+                    "k = jax.random.PRNGKey(0)\n"
+                    "k1, k2 = jax.random.split(k)\n"
+                    "a = jax.random.normal(k1, (2,))\n")
+    out = tmp_path / "artifacts" / "report.txt"   # --out creates parents
+    assert cli.main(["lint", str(bad), "--out", str(out)]) == 1
+    assert "RPA001" in out.read_text()
+    capsys.readouterr()
+    assert cli.main(["lint", str(good)]) == 0
+    assert cli.main(["lint", str(bad), "--select", "RPA003"]) == 0
+
+
+def test_lint_src_tree_is_clean():
+    """Acceptance: the shipped tree lints clean (justified noqa only)."""
+    findings = lint_paths(["src"])
+    assert not findings, render_findings(findings)
+
+
+# --------------------------------------------------- runtime sanitizers --
+
+
+def test_compile_monitor_counts_compiles():
+    @jax.jit
+    def f(x):
+        return x * 2.0 + 1.0
+
+    with CompileMonitor() as cold:
+        f(jnp.ones((3,)))
+    assert cold.compiles >= 1
+    with CompileMonitor() as warm:
+        f(jnp.ones((3,)))
+    assert warm.compiles == 0
+
+
+def test_no_retrace_passes_warm_and_raises_cold():
+    @jax.jit
+    def g(x):
+        return jnp.sum(x ** 2)
+
+    x4, x5, x6 = jnp.ones((4,)), jnp.ones((5,)), jnp.ones((6,))
+    g(x4)                                 # warmup
+    with no_retrace("warm g"):
+        g(x4)
+    with pytest.raises(SanitizerError, match="backend compile"):
+        with no_retrace("cold g"):
+            g(x5)                         # new shape => real compile
+    # the allowance escape hatch
+    with no_retrace("cold g, allowed", allow_compiles=1):
+        g(x6)
+
+
+def test_key_reuse_detector_raises_and_records():
+    with KeyReuseDetector() as det:
+        k = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(k)
+        jax.random.normal(k1, (2,))
+        jax.random.uniform(k2, (2,))      # distinct subkeys: fine
+        with pytest.raises(SanitizerError, match="consumed twice"):
+            jax.random.normal(k1, (2,))
+    assert len(det.reuses) == 1
+    with KeyReuseDetector(mode="record") as det:
+        k = jax.random.PRNGKey(1)
+        jax.random.normal(k, ())
+        jax.random.normal(k, ())          # recorded, not raised
+    assert len(det.reuses) == 1
+    # exit restores the real functions
+    assert jax.random.split.__module__.startswith("jax.")
+
+
+def test_key_reuse_detector_skips_traced_keys():
+    @jax.jit
+    def draw(k):
+        a = jax.random.normal(k, ())
+        b = jax.random.normal(k, ())      # tracer: static rule territory
+        return a + b
+
+    with KeyReuseDetector():
+        draw(jax.random.PRNGKey(2))       # key itself concrete-consumed once
+
+
+def test_check_finite():
+    check_finite({"a": jnp.ones((2,)), "n": np.arange(3)}, "ok tree")
+    with pytest.raises(SanitizerError, match="non-finite"):
+        check_finite({"a": jnp.array([1.0, float("nan")])}, "bad tree")
+    with pytest.raises(SanitizerError, match="non-finite"):
+        check_finite([jnp.array([float("inf")])], "inf tree")
+
+
+# ----------------------------------------------- EngineOptions.sanitize --
+
+
+def _tiny_engine(sanitize, *, eta=0.1, rounds=2):
+    from repro.configs.cefl_paper import ClassifierConfig
+    from repro.core import Engine, EngineOptions, MLConstants
+    from repro.data import make_image_dataset, make_online_ues
+    from repro.models.classifier import (classifier_accuracy,
+                                         classifier_loss,
+                                         init_classifier_params)
+    from repro.network import NetworkConfig, make_network
+    from repro.solver import ObjectiveWeights
+    net = make_network(NetworkConfig(num_ue=4, num_bs=2, num_dc=2))
+    (trx, tr_y), (tex, te_y) = make_image_dataset(1200, (8, 8, 1))
+    p0 = init_classifier_params(
+        jax.random.PRNGKey(0), ClassifierConfig(input_shape=(8, 8, 1),
+                                                hidden=(16,)))
+    consts = MLConstants(L=5.0, theta_i=np.ones(6) * 2,
+                         sigma_i=np.ones(6) * 3, zeta1=2.0, zeta2=1.0)
+    eng = Engine(net, "greedy_data", consts=consts, ow=ObjectiveWeights(),
+                 opts=EngineOptions(rounds=rounds, eta=eta, solver_outer=2,
+                                    sanitize=sanitize))
+    ues = make_online_ues(trx, tr_y, num_ue=4, mean_arrivals=100,
+                          std_arrivals=10)
+    return eng, ues, p0, classifier_loss, \
+        lambda p: classifier_accuracy(p, jnp.asarray(tex[:100]),
+                                      jnp.asarray(te_y[:100]))
+
+
+def test_engine_sanitize_mode_clean_run():
+    eng, ues, p0, loss_fn, eval_fn = _tiny_engine(True)
+    res = eng.run(ues, init_params=p0, loss_fn=loss_fn, eval_fn=eval_fn)
+    assert len(res) == 2 and np.isfinite(res.final.acc)
+
+
+def test_engine_sanitize_mode_catches_divergence():
+    """An exploding step size drives params to Inf/NaN; sanitize mode
+    turns the silent garbage run into a SanitizerError."""
+    eng, ues, p0, loss_fn, eval_fn = _tiny_engine(True, eta=1e12)
+    with pytest.raises(SanitizerError, match="non-finite"):
+        eng.run(ues, init_params=p0, loss_fn=loss_fn, eval_fn=eval_fn)
+
+
+def test_spec_threads_sanitize():
+    from repro import experiments as E
+    spec = E.get_experiment("sweep_smoke").override(
+        **{"engine.sanitize": True})
+    opts = spec.engine_options(0)
+    assert opts.sanitize is True
+    assert E.get_experiment("sweep_smoke").engine_options(0).sanitize \
+        is False
+
+
+# -------------------------------------------- engine no-retrace pinning --
+
+
+def test_campus_walk_five_rounds_no_retrace(assert_no_retrace):
+    """Acceptance: a 5-round dynamic campus_walk run, replayed after an
+    identical warmup, performs ZERO XLA backend compiles — solver
+    re-solves, fedprox local training, aggregation kernels, and eval all
+    hit their caches (the process-wide generalization of the PR-3/PR-4
+    per-module cache probes)."""
+    from repro.configs.cefl_paper import ClassifierConfig
+    from repro.core import Engine, EngineOptions, MLConstants
+    from repro.data import make_image_dataset, make_online_ues
+    from repro.models.classifier import (classifier_accuracy,
+                                         classifier_loss,
+                                         init_classifier_params)
+    from repro.network import NetworkConfig, make_network
+    from repro.solver import ObjectiveWeights
+    net = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2))
+    (trx, tr_y), (tex, te_y) = make_image_dataset(2000, (8, 8, 1))
+    p0 = init_classifier_params(
+        jax.random.PRNGKey(0), ClassifierConfig(input_shape=(8, 8, 1),
+                                                hidden=(16,)))
+    consts = MLConstants(L=5.0, theta_i=np.ones(8) * 2,
+                         sigma_i=np.ones(8) * 3, zeta1=2.0, zeta2=1.0)
+    tex, te_y = jnp.asarray(tex[:200]), jnp.asarray(te_y[:200])
+
+    def run():
+        eng = Engine(net, "cefl", consts=consts, ow=ObjectiveWeights(),
+                     scenario="campus_walk",
+                     opts=EngineOptions(rounds=5, eta=0.1, solver_outer=2,
+                                        seed=0))
+        ues = make_online_ues(trx, tr_y, num_ue=6, mean_arrivals=80,
+                              std_arrivals=8, seed=0)
+        return eng.run(ues, init_params=p0, loss_fn=classifier_loss,
+                       eval_fn=lambda p: classifier_accuracy(p, tex, te_y))
+
+    warm = run()                          # populates every cache
+    with assert_no_retrace():
+        rerun = run()                     # same seed => same shapes
+    assert rerun.series("loss") == warm.series("loss")

@@ -117,6 +117,22 @@ def test_vmap_vs_sequential_sweep_parity():
     assert 0.0 <= st["final_acc_mean"] <= 1.0
 
 
+def test_vmap_sweep_no_retrace_across_seeds(assert_no_retrace):
+    """The K-seed vmapped sweep compiles once per (gamma, m, bucket)
+    group, not per seed: the jitted scans and the K-stacked eval are
+    shape-keyed on the group, so replaying the identical spec through
+    the same (warmed) executor performs ZERO XLA backend compiles."""
+    from repro.experiments.sweep import VmapSweepExecutor
+    spec = _smoke()
+    ex = VmapSweepExecutor()
+    warm = E.sweep(spec, executor=ex)
+    with assert_no_retrace():
+        vm = E.sweep(spec, executor=ex)
+    assert vm.seeds == warm.seeds == list(spec.run_seeds)
+    for seed in spec.run_seeds:
+        _assert_runs_identical(warm.result(seed), vm.result(seed))
+
+
 def test_sweep_spec_grid_unique_names_and_merge():
     base = _smoke(**{"engine.rounds": 2, "scenario": "static",
                      "seeds": (0,)})

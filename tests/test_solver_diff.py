@@ -101,22 +101,23 @@ def test_jit_matches_ref(cfg, transform, zero_ue, distributed):
     _assert_parity(net, D_bar, res_ref, res_jit)
 
 
-def test_warm_resolve_hits_compile_cache():
+def test_warm_resolve_hits_compile_cache(assert_no_retrace):
     """Re-solving at the same dims with fresh rates / arrivals must NOT
-    build a new compiled step (rates are traced args, dims key the cache)."""
+    build a new compiled step (rates are traced args, dims key the
+    cache).  Pinned with the process-wide retrace guard (zero XLA
+    compiles anywhere, not just a stable sca cache size)."""
     cfg = NetworkConfig(num_ue=6, num_bs=3, num_dc=2, seed=5)
     net = make_network(cfg)
     consts = _consts(net)
-    sca.solve(net, _d_bar(net), consts, OW, distributed=False,
-              max_outer=2, pd=PD, backend="jit")
+    w0 = sca.solve(net, _d_bar(net), consts, OW, distributed=False,
+                   max_outer=2, pd=PD, backend="jit").w
     n0 = sca.jit_cache_size()
     rng = np.random.RandomState(1)
     net2 = net.resample_rates(rng, 0.2)
-    res = sca.solve(net2, _d_bar(net) * 1.3, consts, OW, distributed=False,
-                    max_outer=2, pd=PD, backend="jit",
-                    w0=sca.solve(net, _d_bar(net), consts, OW,
-                                 distributed=False, max_outer=1, pd=PD,
-                                 backend="jit").w)
+    with assert_no_retrace():
+        res = sca.solve(net2, _d_bar(net) * 1.3, consts, OW,
+                        distributed=False, max_outer=2, pd=PD,
+                        backend="jit", w0=w0)
     assert sca.jit_cache_size() == n0
     assert len(res.objective_history) >= 2
 

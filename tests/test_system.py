@@ -37,9 +37,10 @@ def _run(strategy, rounds=5):
                           std_arrivals=20)
     opts = CEFLOptions(rounds=rounds, strategy=strategy, eta=0.1,
                        solver_outer=2, reoptimize_every=3)
-    return run_cefl(NET, ues, init_params=P0, loss_fn=classifier_loss,
-                    eval_fn=_eval, consts=CONSTS, ow=ObjectiveWeights(),
-                    opts=opts)
+    with pytest.warns(DeprecationWarning, match="run_cefl is deprecated"):
+        return run_cefl(NET, ues, init_params=P0, loss_fn=classifier_loss,
+                        eval_fn=_eval, consts=CONSTS, ow=ObjectiveWeights(),
+                        opts=opts)
 
 
 def test_cefl_learns_and_accounts_costs():
