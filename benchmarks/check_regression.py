@@ -3,14 +3,22 @@ against the committed baselines in ``BENCH_kernels.json`` /
 ``BENCH_solver.json`` (their ``smoke_baseline`` sections) and fail on
 regression.
 
-Only *machine-portable* metrics are gated — speedup ratios measured
-same-run/same-machine (plane vs tree, jit solver vs numpy oracle) — never
-absolute wall-clock, which is meaningless across CI runners.  A metric
-regresses when ``fresh < baseline / tol``; ``tol`` (default 3.0, override
-``--tol`` or ``BENCH_TOL``) absorbs runner noise while still catching the
-order-of-magnitude rots the gate exists for (e.g. the jitted solver
-silently falling back to per-call retraces, or the fused kernels losing
-to the unfused path).
+Only *machine-portable* metrics are gated — same-run/same-machine ratios
+(plane vs tree, jit solver vs numpy oracle, fused kernel vs unfused XLA)
+— never absolute wall-clock, which is meaningless across CI runners.  A
+speedup regresses when ``fresh < baseline / tol``; lower-is-better
+ratios (``fedprox_vs_xla_ratio``) regress when ``fresh > baseline *
+tol``.  ``tol`` (default 3.0, override ``--tol`` or ``BENCH_TOL``)
+absorbs runner noise while still catching the order-of-magnitude rots
+the gate exists for (e.g. the jitted solver silently falling back to
+per-call retraces, or the fused kernels losing to the unfused path).
+
+The kernels baseline is keyed per kernel backend (``smoke_baseline.
+<backend>.*``, matching ``results.<backend>.*`` in BENCH_kernels.json):
+the gate reads the fresh run's ``backend`` key and compares against that
+section only, skipping gracefully when no baseline for the backend has
+been committed yet (``--update`` records one without touching the other
+backends' sections).
 
     PYTHONPATH=src python -m benchmarks.microbench --smoke --out out/k.json
     PYTHONPATH=src python -m benchmarks.fig7_solver --smoke --out out/s.json
@@ -35,7 +43,11 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # metric -> how to read it from a smoke-run JSON
 KERNEL_METRICS = ("sim_round_speedup", "mesh_round_speedup",
-                  "solver_plan_speedup")
+                  "solver_plan_speedup", "fedprox_vs_xla_ratio")
+
+# metrics where SMALLER is better (gated as fresh <= baseline * tol);
+# everything else is a speedup gated as fresh >= baseline / tol
+LOWER_IS_BETTER = frozenset({"fedprox_vs_xla_ratio"})
 
 
 def _load(path):
@@ -43,9 +55,25 @@ def _load(path):
         return json.load(f)
 
 
+def _is_per_backend(section) -> bool:
+    """True for the per-backend schema ({"cpu": {...}, "tpu": {...}});
+    False for the legacy flat metric dict."""
+    return (isinstance(section, dict) and section
+            and all(isinstance(v, dict) for v in section.values()))
+
+
 def kernel_ratios(fresh: dict) -> dict:
+    """Gated ratios from a fresh microbench JSON — per-backend schema
+    (``results.<backend>.*``, the run's own ``backend`` key selects the
+    section) or the legacy flat layout."""
     res = fresh["results"]
+    if _is_per_backend(res):
+        res = res.get(fresh.get("backend")) or next(iter(res.values()))
     return {k: float(res[k]) for k in KERNEL_METRICS if k in res}
+
+
+def kernel_backend(fresh: dict):
+    return fresh.get("backend")
 
 
 def solver_ratios(fresh: dict) -> dict:
@@ -71,38 +99,75 @@ def sweep_ratios(fresh: dict) -> dict:
 
 def compare(baseline: dict, fresh: dict, tol: float):
     """Return (rows, regressions): every baseline metric must exist fresh
-    and satisfy fresh >= baseline / tol."""
+    and satisfy fresh >= baseline / tol (speedups), or
+    fresh <= baseline * tol for LOWER_IS_BETTER metrics."""
     rows, regressions = [], []
     for k, base in sorted(baseline.items()):
-        floor = base / tol
         got = fresh.get(k)
-        ok = got is not None and got >= floor
-        rows.append((k, base, got, floor, ok))
+        if k in LOWER_IS_BETTER:
+            bound = base * tol
+            ok = got is not None and got <= bound
+        else:
+            bound = base / tol
+            ok = got is not None and got >= bound
+        rows.append((k, base, got, bound, ok))
         if not ok:
             regressions.append(k)
     return rows, regressions
 
 
-def _gate(name, committed_path, fresh_path, extract, tol):
+def _select_baseline(baseline, backend):
+    """Pick the backend's section of a per-backend smoke_baseline;
+    legacy flat baselines pass through.  Returns None when the baseline
+    is per-backend but has no section for this backend — the gate then
+    skips (a backend with no committed baseline is tolerated, so CI on
+    new hardware doesn't fail before a baseline exists)."""
+    if _is_per_backend(baseline):
+        if backend is None:
+            return next(iter(baseline.values()))
+        return baseline.get(backend)
+    return baseline
+
+
+def _gate(name, committed_path, fresh_path, extract, tol, backend_of=None):
     committed = _load(committed_path)
     baseline = committed.get("smoke_baseline")
     if not baseline:
         raise SystemExit(
             f"{committed_path} has no 'smoke_baseline' section — "
             f"regenerate it with --update")
-    fresh = extract(_load(fresh_path))
+    fresh_json = _load(fresh_path)
+    backend = backend_of(fresh_json) if backend_of else None
+    baseline = _select_baseline(baseline, backend)
+    if baseline is None:
+        print(f"== {name}: no committed baseline for backend "
+              f"{backend!r} — skipped (run --update to record one) ==")
+        return []
+    fresh = extract(fresh_json)
+    tag = f", backend {backend}" if backend else ""
     rows, regressions = compare(baseline, fresh, tol)
-    print(f"== {name} (tol {tol:g}x) ==")
-    for k, base, got, floor, ok in rows:
+    print(f"== {name} (tol {tol:g}x{tag}) ==")
+    for k, base, got, bound, ok in rows:
         got_s = "MISSING" if got is None else f"{got:8.2f}"
+        rel = "ceil " if k in LOWER_IS_BETTER else "floor"
         print(f"  {'ok ' if ok else 'REG'} {k:34s} baseline {base:8.2f}  "
-              f"fresh {got_s}  floor {floor:8.2f}")
+              f"fresh {got_s}  {rel} {bound:8.2f}")
     return regressions
 
 
-def _update(committed_path, fresh_path, extract):
+def _update(committed_path, fresh_path, extract, backend_of=None):
     committed = _load(committed_path)
-    committed["smoke_baseline"] = extract(_load(fresh_path))
+    fresh_json = _load(fresh_path)
+    ratios = extract(fresh_json)
+    backend = backend_of(fresh_json) if backend_of else None
+    if backend:
+        # per-backend baseline: merge this backend's section, keep others
+        base = committed.get("smoke_baseline")
+        base = dict(base) if _is_per_backend(base) else {}
+        base[backend] = ratios
+        committed["smoke_baseline"] = base
+    else:
+        committed["smoke_baseline"] = ratios
     with open(committed_path, "w") as f:
         json.dump(committed, f, indent=2)
         f.write("\n")
@@ -126,22 +191,23 @@ def main(argv=None):
     pairs = []
     if args.kernels:
         pairs.append(("kernels", os.path.join(_ROOT, "BENCH_kernels.json"),
-                      args.kernels, kernel_ratios))
+                      args.kernels, kernel_ratios, kernel_backend))
     if args.solver:
         pairs.append(("solver", os.path.join(_ROOT, "BENCH_solver.json"),
-                      args.solver, solver_ratios))
+                      args.solver, solver_ratios, None))
     if args.sweep:
         pairs.append(("sweep", os.path.join(_ROOT, "BENCH_sweep.json"),
-                      args.sweep, sweep_ratios))
+                      args.sweep, sweep_ratios, None))
 
     if args.update:
-        for _, committed, fresh, extract in pairs:
-            _update(committed, fresh, extract)
+        for _, committed, fresh, extract, backend_of in pairs:
+            _update(committed, fresh, extract, backend_of)
         return 0
 
     regressions = []
-    for name, committed, fresh, extract in pairs:
-        regressions += _gate(name, committed, fresh, extract, args.tol)
+    for name, committed, fresh, extract, backend_of in pairs:
+        regressions += _gate(name, committed, fresh, extract, args.tol,
+                             backend_of)
     if regressions:
         print(f"BENCH REGRESSION: {regressions}", file=sys.stderr)
         return 1

@@ -183,9 +183,9 @@ def main(out_path=None):
 
 
 if __name__ == "__main__":
-    from benchmarks.microbench import _out_path
+    from benchmarks.microbench import _flag_value
     _argv = sys.argv[1:]
-    _out = _out_path(_argv)
+    _out = _flag_value(_argv, "--out")
     if "--smoke" in _argv:
         run_scaling(smoke=True, out_path=_out)
     else:

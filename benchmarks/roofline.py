@@ -1,12 +1,33 @@
-"""Roofline report builder: reads results/dryrun/*.json (written by
-repro.launch.dryrun) and emits the EXPERIMENTS.md §Roofline table."""
+"""Roofline report builder.
+
+Two modes:
+
+* default — reads results/dryrun/*.json (written by repro.launch.dryrun)
+  and emits the EXPERIMENTS.md §Roofline table;
+* ``--kernels [BENCH_kernels.json]`` — turns the measured kernel times in
+  the per-backend BENCH trajectory into achieved memory bandwidth
+  (bytes-moved / wall-clock, bytes derived from the plane shapes the
+  bench records in its config section) against a nominal per-backend
+  peak, so each backend section reads as a fraction of roofline::
+
+      PYTHONPATH=src python -m benchmarks.roofline --kernels
+      PYTHONPATH=src python -m benchmarks.roofline --kernels out/k.json \
+          --out bench_out/roofline_kernels.txt        # CI artifact
+"""
 from __future__ import annotations
 
 import json
+import os
 import sys
 from pathlib import Path
 
-from repro.utils.roofline import Roofline
+from repro.utils.roofline import HBM_BW, Roofline
+
+# nominal peak memory bandwidth per kernel backend (B/s).  TPU uses the
+# same per-chip HBM figure as the dry-run roofline; GPU assumes an
+# A100-class HBM2e part; cpu/interpret use a dual-channel-DDR ballpark —
+# these normalize the trajectory, they are not calibrated to the runner.
+PEAK_BW = {"tpu": HBM_BW, "gpu": 1.5e12, "cpu": 5e10, "interpret": 5e10}
 
 
 def load_rows(outdir="results/dryrun", mesh="16x16"):
@@ -46,8 +67,86 @@ def fmt_table(rows):
     return "\n".join(lines)
 
 
-def main():
-    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+# ------------------------------------------ kernel bandwidth mode -----
+
+def _kernel_bytes(config: dict) -> dict:
+    """Bytes moved per kernel launch, from the plane shapes the bench
+    records (f32 planes): fedprox streams x/g/anchor in + x out; stacked
+    nova streams x/d in + out (weights are negligible)."""
+    out = {}
+    shp = config.get("fedprox_shape")
+    if shp:
+        r, lane = shp
+        out["fedprox_kernel_us"] = 4 * r * lane * 4
+        out["fedprox_unfused_xla_us"] = 4 * r * lane * 4
+    stk = config.get("nova_stack")
+    if stk:
+        n, r, lane = stk
+        out["nova_stacked_us"] = 3 * n * r * lane * 4
+    return out
+
+
+def kernel_rows(bench: dict) -> list:
+    """(backend, kernel, us, GB/s achieved, peak fraction) rows from a
+    per-backend BENCH_kernels.json (legacy flat files yield one section
+    keyed by the file's ``backend``)."""
+    res = bench.get("results", {})
+    if not any(isinstance(v, dict) for v in res.values()):
+        res = {bench.get("backend", "cpu"): res}
+    nbytes = _kernel_bytes(bench.get("config", {}))
+    rows = []
+    for backend in sorted(res):
+        peak = PEAK_BW.get(backend)
+        for key, moved in nbytes.items():
+            us = res[backend].get(key)
+            if us is None or us <= 0:
+                continue
+            bw = moved / (us * 1e-6)
+            frac = bw / peak if peak else float("nan")
+            rows.append((backend, key.replace("_us", ""), us, bw, frac))
+    return rows
+
+
+def fmt_kernel_table(rows) -> str:
+    hdr = (f"| {'backend':9s} | {'kernel':20s} | {'us':>9s} | "
+           f"{'GB/s':>8s} | {'of peak':>8s} |")
+    lines = [hdr, "|" + "-" * (len(hdr) - 2) + "|"]
+    for backend, kern, us, bw, frac in rows:
+        lines.append(f"| {backend:9s} | {kern:20s} | {us:9.1f} | "
+                     f"{bw / 1e9:8.2f} | {frac:7.1%} |")
+    return "\n".join(lines)
+
+
+def kernel_report(path=None, out=None) -> str:
+    path = path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_kernels.json")
+    bench = json.loads(Path(path).read_text())
+    rows = kernel_rows(bench)
+    body = (f"### Kernel achieved bandwidth ({len(rows)} rows, "
+            f"from {os.path.basename(path)})\n\n" + fmt_kernel_table(rows))
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        Path(out).write_text(body + "\n")
+        print(f"[roofline] wrote {out}")
+    return body
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if "--kernels" in argv:
+        i = argv.index("--kernels")
+        path = (argv[i + 1] if i + 1 < len(argv)
+                and not argv[i + 1].startswith("--") else None)
+        out = None
+        if "--out" in argv:
+            j = argv.index("--out")
+            if j + 1 >= len(argv) or argv[j + 1].startswith("--"):
+                raise SystemExit("--out requires a path argument")
+            out = argv[j + 1]
+        print(kernel_report(path, out))
+        return
+    outdir = argv[0] if argv else "results/dryrun"
     for mesh in ("16x16", "2x16x16"):
         rows = load_rows(outdir, mesh)
         if rows:

@@ -59,6 +59,12 @@ class EngineOptions:
                                     # t % eval_every == 0 and the last
                                     # round; off-cadence rounds carry the
                                     # last measured accuracy forward
+    kernel_backend: str = "auto"    # how the plane kernel ops run: "auto"
+                                    # (hardware-detected process default),
+                                    # "cpu" (jitted jnp), "interpret"
+                                    # (Pallas interpreter), "gpu"/"tpu"
+                                    # (tiled compiled grids) — see
+                                    # repro.kernels.ops
     sanitize: bool = False          # runtime sanitizer (repro.analysis):
                                     # NaN/Inf check on the aggregated
                                     # params each round + host-level PRNG

@@ -160,18 +160,37 @@ class SimExecutor:
     instead of G.
 
     With ``use_plane`` (default), parameters stay on the flat parameter
-    plane end-to-end: local training runs the fused Pallas kernels
-    (``fedprox.local_train*`` plane backend) and eq.-11 aggregation is one
-    fused kernel launch over the stacked d_i planes.  ``use_plane=False``
-    is the pre-plane per-leaf tree path, kept for equivalence tests and
-    the tree-vs-plane benchmark.
+    plane end-to-end: local training runs the fused kernels
+    (``fedprox.local_train*`` plane backend, dispatched per
+    ``kernel_backend`` — see ``kernels/ops.py``) and eq.-11 aggregation is
+    one fused kernel launch over the stacked d_i planes.
+    ``use_plane=False`` is the pre-plane per-leaf tree path, kept for
+    equivalence tests and the tree-vs-plane benchmark.
+
+    With ``fuse_round`` (default), a round whose live DPUs form ONE
+    homogeneous (gamma, m, bucket) group — the common case outside
+    heterogeneous-plan strategies — runs as a single jitted program
+    (``fedprox.local_round_plane``): training scan + eq.-10 + eq.-11
+    aggregation, and on eval-cadence rounds the engine passes ``eval_fn``
+    so the eval forward pass fuses into the SAME program (no separate
+    vmapped eval dispatch, no tree materialization).
     """
     batch_homogeneous: bool = True
     use_plane: bool = True
+    fuse_round: bool = True
+    kernel_backend: str = "auto"    # ops.resolve_backend name
+
+    @property
+    def fused_eval(self) -> bool:
+        """The engine hands eval_fn to ``run_round`` when this is set
+        (the executor then returns the round's accuracy, or None when a
+        round couldn't fuse and eval must run separately)."""
+        return self.use_plane and self.batch_homogeneous and \
+            self.fuse_round
 
     def run_round(self, params, plan: RoundPlan, datasets, *, loss_fn,
                   eta: float, mu: float, theta: Optional[float], agg: str,
-                  key):
+                  key, eval_fn=None):
         backend = "plane" if self.use_plane else "tree"
         if self.use_plane:
             params = as_plane(params)
@@ -179,7 +198,8 @@ class SimExecutor:
         live = [(i, d) for i, d in enumerate(datasets)
                 if d is not None and len(d["y"])]
         if not live:
-            return params, float("nan")
+            out = (params, float("nan"))
+            return out + (None,) if eval_fn is not None else out
         keys = jax.random.split(key, len(live))
         results = [None] * len(live)
         if self.batch_homogeneous:
@@ -189,12 +209,33 @@ class SimExecutor:
                     fedprox.batch_size(len(d["y"]), ms[i]))
                 groups.setdefault(
                     (int(gammas[i]), float(ms[i]), bucket), []).append(j)
+            if (self.fuse_round and self.use_plane and len(groups) == 1
+                    and agg in ("cefl", "fednova")):
+                # single homogeneous group: the whole round (train +
+                # aggregate [+ eval]) is ONE jitted program
+                (gamma, m, _bucket), idxs = next(iter(groups.items()))
+                # tau_eff = sum_i p_i gamma_i degenerates to gamma here,
+                # which is also FedNova's theta
+                theta_val = float(theta) if (agg == "cefl"
+                                             and theta is not None) \
+                    else float(gamma)
+                Ds = [len(live[j][1]["y"]) for j in idxs]
+                new_params, losses, acc = fedprox.local_round_plane(
+                    params, loss_fn, [live[j][1] for j in idxs],
+                    gamma=gamma, m_frac=m, eta=eta, mu=mu,
+                    keys=[keys[j] for j in idxs], theta=theta_val,
+                    kernel_backend=self.kernel_backend, eval_fn=eval_fn)
+                mean_loss = weighted_mean(list(losses), Ds)
+                if eval_fn is not None:
+                    return new_params, mean_loss, acc
+                return new_params, mean_loss
             for (gamma, m, _bucket), idxs in groups.items():
                 out = fedprox.local_train_batched(
                     params, loss_fn, [live[j][1] for j in idxs],
                     gamma=gamma, m_frac=m, eta=eta, mu=mu,
                     keys=[keys[j] for j in idxs],
-                    backend=backend, keep_planes=self.use_plane)
+                    backend=backend, keep_planes=self.use_plane,
+                    kernel_backend=self.kernel_backend)
                 for j, r in zip(idxs, out):
                     results[j] = r
         else:
@@ -202,10 +243,15 @@ class SimExecutor:
                 results[j] = fedprox.local_train(
                     params, loss_fn, d, gamma=int(gammas[i]),
                     m_frac=float(ms[i]), eta=eta, mu=mu, key=keys[j],
-                    backend=backend, keep_planes=self.use_plane)
+                    backend=backend, keep_planes=self.use_plane,
+                    kernel_backend=self.kernel_backend)
         new_params = _aggregate(params, results, agg, eta=eta, theta=theta)
         mean_loss = weighted_mean([r.loss for r in results],
                                   [r.num_examples for r in results])
+        if eval_fn is not None:
+            # couldn't fuse (heterogeneous groups / fedavg): the caller
+            # evaluates separately
+            return new_params, mean_loss, None
         return new_params, mean_loss
 
 
@@ -234,6 +280,7 @@ class MeshExecutor:
     """
     agg_schedule: str = "all_reduce"
     use_plane: bool = True
+    kernel_backend: str = "auto"    # ops.resolve_backend name
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def build_step(self, micro_loss_fn, hyper: CEFLHyper, *, jit=True):
@@ -250,7 +297,8 @@ class MeshExecutor:
                 return loss_fn(p, micro, mask), {}
             hyper = CEFLHyper(eta=eta, mu=mu, theta=1.0,
                               gamma_max=gamma_max, n_micro=1,
-                              agg_schedule=self.agg_schedule)
+                              agg_schedule=self.agg_schedule,
+                              kernel_backend=self.kernel_backend)
             # no donation here: run_round still needs the undonated params
             self._cache[cache_key] = jax.jit(
                 build_cefl_round_step(micro_loss, hyper))
@@ -429,7 +477,8 @@ class Engine:
         # ("static", "campus_walk", ...) or a Scenario instance
         self.scenario = get_scenario(
             scenario if scenario is not None else self.opts.scenario)
-        self.executor = executor if executor is not None else SimExecutor()
+        self.executor = executor if executor is not None else \
+            SimExecutor(kernel_backend=self.opts.kernel_backend)
         self.callbacks: List[RoundCallback] = list(callbacks)
         self.validate_plans = validate_plans
         self.consts = consts
@@ -590,11 +639,23 @@ class Engine:
     def _run_loop(self, state: LoopState, online_datasets) -> RunResult:
         while state.t < self.opts.rounds and not state.stopped:
             staged = self.begin_round(state, online_datasets)
-            state.params, mean_loss = self.executor.run_round(
+            kw = {}
+            if (state.eval_fn is not None and self.should_eval(staged.t)
+                    and getattr(self.executor, "fused_eval", False)):
+                # fuse the eval forward pass into the round program; the
+                # executor returns acc=None if the round couldn't fuse
+                # (finish_round then evaluates separately)
+                kw["eval_fn"] = state.eval_fn
+            out = self.executor.run_round(
                 state.params, staged.plan, staged.datasets,
                 loss_fn=state.loss_fn, eta=self.opts.eta,
                 mu=self.mu_effective, theta=self.opts.theta,
-                agg=self.aggregation, key=staged.key)
-            self.finish_round(state, staged, mean_loss)
+                agg=self.aggregation, key=staged.key, **kw)
+            acc = None
+            if "eval_fn" in kw:
+                state.params, mean_loss, acc = out
+            else:
+                state.params, mean_loss = out
+            self.finish_round(state, staged, mean_loss, acc)
         return RunResult(reports=state.reports,
                          params=as_tree(state.params))

@@ -87,53 +87,142 @@ def _bucket(n: int) -> int:
 # ------------------------------------------------- plane hot path -----
 
 _PLANE_TRAIN_CACHE = {}
+_PLANE_ROUND_CACHE = {}
 
 
-def _plane_train_fn(loss_fn, spec, batched_anchor: bool = False):
-    """ONE jitted function running the full gamma-step local-training loop
-    of a DPU group on parameter planes.  The tree view needed by
-    ``loss_fn`` is a compile-time slice/reshape of the plane inside the
-    traced graph (its transpose re-flattens the gradient) — there is no
-    host-level flatten/unflatten anywhere in the loop.
+def _plane_train_core(loss_fn, spec, batched_anchor: bool, backend: str):
+    """The (untraced) full gamma-step local-training loop of a DPU group
+    on parameter planes.  The tree view needed by ``loss_fn`` is a
+    compile-time slice/reshape of the plane inside the traced graph (its
+    transpose re-flattens the gradient) — there is no host-level
+    flatten/unflatten anywhere in the loop, and the per-step mini-batch
+    GATHER happens inside the scan too: the group's datasets arrive as
+    one stacked (G, Db, ...) device tree plus (gamma, G, bucket) index
+    arrays, so rounds cost zero per-DPU host gathers.
 
     ``batched_anchor``: the anchor is (G, R, LANE) — one per element —
     instead of one (R, LANE) plane shared by the group.  This is the
     multi-run form (``local_train_multi``): elements from different
     seeded runs, each proximal to its own global model, in one scan.
     """
-    key = (loss_fn, spec, batched_anchor)
+    del batched_anchor  # the fused kernel broadcasts either anchor form
+
+    def plane_loss(pp, batch, w):
+        return loss_fn(spec.unflatten(pp), batch, w)
+
+    vgrad = jax.vmap(jax.value_and_grad(plane_loss))
+    take = jax.vmap(lambda xd, ik: xd[ik])     # per-DPU in-jit gather
+
+    def run(p_stack, anchor, data_stack, idx, weights, a, eta, mu):
+        """p_stack: (G, R, LANE); anchor: (R, LANE) shared or
+        (G, R, LANE) per-element; ``data_stack`` leaves (G, Db, ...);
+        idx: (gamma, G, bucket) i32; weights (gamma, G, bucket);
+        a: (gamma,) FedNova coefficients."""
+        G = p_stack.shape[0]
+        ones = jnp.ones((G,), jnp.float32)
+        acc0 = jnp.zeros_like(p_stack)
+
+        def body(carry, inp):
+            p, acc = carry
+            idx_k, w_k, a_k = inp
+            batch_k = jax.tree_util.tree_map(
+                lambda xd: take(xd, idx_k), data_stack)
+            losses, g = vgrad(p, batch_k, w_k)
+            p, acc = ops.fedprox_accum_plane(
+                p, g, anchor, acc, a_k * ones, ones, eta, mu,
+                backend=backend)
+            return (p, acc), losses
+
+        (p, acc), losses = jax.lax.scan(
+            body, (p_stack, acc0), (idx, weights, a))
+        return p, acc, losses      # losses: (gamma, G)
+
+    return run
+
+
+def _plane_train_fn(loss_fn, spec, batched_anchor: bool = False,
+                    kernel_backend: str = "auto"):
+    """Jitted :func:`_plane_train_core` (cached per loss/spec/backend —
+    ``"auto"`` resolves against the process default at build time)."""
+    backend = ops.resolve_backend(kernel_backend)
+    key = (loss_fn, spec, batched_anchor, backend)
     if key not in _PLANE_TRAIN_CACHE:
-        interpret = ops.INTERPRET
-
-        def plane_loss(pp, batch, w):
-            return loss_fn(spec.unflatten(pp), batch, w)
-
-        vgrad = jax.vmap(jax.value_and_grad(plane_loss))
-
-        def run(p_stack, anchor, batches, weights, a, eta, mu):
-            """p_stack: (G, R, LANE); anchor: (R, LANE) shared or
-            (G, R, LANE) per-element; ``batches`` leaves
-            (gamma, G, bucket, ...); weights (gamma, G, bucket);
-            a: (gamma,) FedNova coefficients."""
-            G = p_stack.shape[0]
-            ones = jnp.ones((G,), jnp.float32)
-            acc0 = jnp.zeros_like(p_stack)
-
-            def body(carry, inp):
-                p, acc = carry
-                batch_k, w_k, a_k = inp
-                losses, g = vgrad(p, batch_k, w_k)
-                p, acc = ops.fedprox_accum_plane(
-                    p, g, anchor, acc, a_k * ones, ones, eta, mu,
-                    interpret=interpret)
-                return (p, acc), losses
-
-            (p, acc), losses = jax.lax.scan(
-                body, (p_stack, acc0), (batches, weights, a))
-            return p, acc, losses      # losses: (gamma, G)
-
-        _PLANE_TRAIN_CACHE[key] = jax.jit(run)
+        _PLANE_TRAIN_CACHE[key] = jax.jit(
+            _plane_train_core(loss_fn, spec, batched_anchor, backend))
     return _PLANE_TRAIN_CACHE[key]
+
+
+def _plane_round_fn(loss_fn, spec, kernel_backend: str = "auto",
+                    eval_fn=None):
+    """ONE jitted program for a whole homogeneous-group round: the full
+    gamma-step training scan, the eq.-10 normalization d = acc/||a||_1,
+    the eq.-11 aggregation, and (when ``eval_fn`` is given) the eval
+    forward pass on the aggregated model — train+eval in a single jit
+    per group, so an eval round costs zero extra dispatches beyond the
+    round itself.  Returns (new_plane_data, losses, acc_or_())."""
+    backend = ops.resolve_backend(kernel_backend)
+    key = (loss_fn, spec, backend, eval_fn)
+    if key not in _PLANE_ROUND_CACHE:
+        run = _plane_train_core(loss_fn, spec, False, backend)
+
+        def round_run(p_stack, anchor, data_stack, idx, weights, a,
+                      eta, mu, w_abs, theta_eta):
+            _p, acc, losses = run(p_stack, anchor, data_stack, idx,
+                                  weights, a, eta, mu)
+            d = acc / jnp.sum(a)               # == host acc/float(sum(a))
+            w = w_abs / jnp.sum(w_abs)         # the single normalization
+            new = ops.nova_aggregate_plane(anchor, d, w, theta_eta,
+                                           backend=backend)
+            if eval_fn is None:
+                return new, losses, ()
+            return new, losses, eval_fn(spec.unflatten(new))
+
+        _PLANE_ROUND_CACHE[key] = jax.jit(round_run)
+    return _PLANE_ROUND_CACHE[key]
+
+
+def local_round_plane(params, loss_fn: Callable, datasets, *, gamma: int,
+                      m_frac: float, eta: float, mu: float, keys,
+                      theta: float, kernel_backend: str = "auto",
+                      eval_fn=None):
+    """One FUSED CE-FL round for a homogeneous-(gamma, m) DPU group.
+
+    The gamma-step training scan, the eq.-10 normalization, the eq.-11
+    aggregation at ``theta``, and (optionally) the eval forward pass on
+    the aggregated model run as ONE jitted program — semantically equal
+    to ``local_train_batched`` + ``aggregation.aggregate`` + ``eval_fn``
+    but with zero intermediate host round-trips.  The engine's
+    :class:`~repro.core.engine.SimExecutor` routes single-group plane
+    rounds here.
+
+    Returns ``(new_plane, per_dpu_mean_losses, acc)`` where the losses
+    are a host ``(G,)`` array (mean over the gamma steps, the
+    ``LocalResult.loss`` convention) and ``acc`` is None unless
+    ``eval_fn`` was given.
+    """
+    plane = as_plane(params)
+    spec = plane.spec
+    G = len(datasets)
+    p0 = plane.broadcast(G).data
+    Ds = [jax.tree_util.tree_leaves(d)[0].shape[0] for d in datasets]
+    bszs = [batch_size(D, m_frac) for D in Ds]
+    bucket = _bucket(max(bszs))
+    assert all(_bucket(b) == bucket for b in bszs), \
+        "grouping must put same-bucket DPUs together"
+    a = a_coefficients(gamma, eta, mu)
+    step_keys = jax.vmap(lambda k: jax.random.split(k, gamma))(
+        jnp.stack(keys))
+    data_stack, idx, weights = _stage_group_batches(datasets, step_keys, Ds,
+                                                    bucket, gamma, m_frac)
+    run = _plane_round_fn(loss_fn, spec, kernel_backend, eval_fn)
+    new_data, losses, acc = run(
+        p0, plane.data, data_stack, idx, weights, a,
+        jnp.asarray(eta, jnp.float32), jnp.asarray(mu, jnp.float32),
+        jnp.asarray(Ds, jnp.float32),
+        jnp.asarray(theta * eta, jnp.float32))
+    mean_loss = np.asarray(losses).mean(axis=0)         # (G,) — one sync
+    return (plane.with_data(new_data), mean_loss,
+            None if eval_fn is None else float(acc))
 
 
 @functools.lru_cache(maxsize=512)
@@ -147,33 +236,35 @@ def _choice_all_steps(num_examples: int, bsz: int):
                                     replace=False)))
 
 
-def _gather_group_batches(datasets, step_keys, Ds, bucket, gamma, m_frac):
-    """Pre-sample every (step, DPU) mini-batch (same PRNG streams as the
-    sequential path) and stack to (gamma, G, bucket, ...).  The batched
-    restructuring — one vmapped choice and one gather per DPU for ALL
-    gamma steps — is part of the plane hot path: host-side dispatches per
-    round drop from O(gamma * G) to O(G)."""
-    per_dpu_batches, per_dpu_wts = [], []
-    for j, d in enumerate(datasets):
+def _stage_group_batches(datasets, step_keys, Ds, bucket, gamma, m_frac):
+    """Stage a group's round data DEVICE-SIDE: datasets right-padded to a
+    shared power-of-two example bucket and stacked to (G, Db, ...), plus
+    (gamma, G, bucket) mini-batch index/weight arrays (same PRNG streams
+    as the sequential path).  The per-step gather then happens inside the
+    training scan — unlike the old host-side pre-gather, nothing here
+    synchronizes on a device value, so staging costs O(G) async dispatches
+    instead of O(G) blocking round-trips (the dominant term of the old
+    ``sim_round_plane_us`` profile)."""
+    G = len(datasets)
+    Db = _bucket(max(Ds))
+    data_stack = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([
+            jnp.pad(x, [(0, Db - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+            for x in xs]), *datasets)
+    idx_cols = []
+    wts = np.zeros((gamma, G, bucket), np.float32)
+    for j in range(G):
         bsz = batch_size(Ds[j], m_frac)
-        idx = np.asarray(_choice_all_steps(Ds[j], bsz)(step_keys[j]))
-        pad = np.concatenate(
-            [idx, np.zeros((gamma, bucket - bsz), idx.dtype)], axis=1)
-        wts = np.zeros((gamma, bucket), np.float32)
-        wts[:, :bsz] = 1.0
-        per_dpu_wts.append(wts)
-        per_dpu_batches.append(
-            jax.tree_util.tree_map(lambda x: x[pad.ravel()].reshape(
-                (gamma, bucket) + x.shape[1:]), d))
-    batches = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs, axis=1), *per_dpu_batches)
-    weights = jnp.asarray(np.stack(per_dpu_wts, axis=1), jnp.float32)
-    return batches, weights
+        idx = _choice_all_steps(Ds[j], bsz)(step_keys[j])   # (gamma, bsz)
+        idx_cols.append(jnp.pad(idx, ((0, 0), (0, bucket - bsz))))
+        wts[:, j, :bsz] = 1.0
+    idx_all = jnp.stack(idx_cols, axis=1).astype(jnp.int32)
+    return data_stack, idx_all, jnp.asarray(wts)
 
 
 def _local_train_batched_plane(params, loss_fn, datasets, *, gamma, m_frac,
                                eta, mu, keys, keep_planes=False,
-                               anchors=None):
+                               anchors=None, kernel_backend="auto"):
     G = len(datasets)
     if anchors is None:
         plane = as_plane(params)
@@ -198,12 +289,13 @@ def _local_train_batched_plane(params, loss_fn, datasets, *, gamma, m_frac,
     # sequential `jax.random.split(k, gamma)` calls)
     step_keys = jax.vmap(lambda k: jax.random.split(k, gamma))(
         jnp.stack(keys))
-    batches, weights = _gather_group_batches(datasets, step_keys, Ds,
-                                             bucket, gamma, m_frac)
+    data_stack, idx, weights = _stage_group_batches(datasets, step_keys, Ds,
+                                                    bucket, gamma, m_frac)
     run = _plane_train_fn(loss_fn, spec,
-                          batched_anchor=anchors is not None)
+                          batched_anchor=anchors is not None,
+                          kernel_backend=kernel_backend)
     p_stack, acc, losses = run(p0, anchor,
-                               batches, weights, a,
+                               data_stack, idx, weights, a,
                                jnp.asarray(eta, jnp.float32),
                                jnp.asarray(mu, jnp.float32))
     d_stack = acc / a1
@@ -345,7 +437,7 @@ def _empty_result(params, gamma: int, keep_planes: bool) -> LocalResult:
 
 def local_train(params, loss_fn: Callable, data: dict, *, gamma: int,
                 m_frac: float, eta: float, mu: float, key,
-                backend: str = "plane",
+                backend: str = "plane", kernel_backend: str = "auto",
                 keep_planes: bool = False) -> LocalResult:
     """Run gamma proximal SGD steps at one DPU.
 
@@ -366,12 +458,13 @@ def local_train(params, loss_fn: Callable, data: dict, *, gamma: int,
                                  m_frac=m_frac, eta=eta, mu=mu, key=key)
     return _local_train_batched_plane(
         params, loss_fn, [data], gamma=gamma, m_frac=m_frac, eta=eta,
-        mu=mu, keys=[key], keep_planes=keep_planes)[0]
+        mu=mu, keys=[key], keep_planes=keep_planes,
+        kernel_backend=kernel_backend)[0]
 
 
 def local_train_batched(params, loss_fn: Callable, datasets, *, gamma: int,
                         m_frac: float, eta: float, mu: float, keys,
-                        backend: str = "plane",
+                        backend: str = "plane", kernel_backend: str = "auto",
                         keep_planes: bool = False):
     """``local_train`` for a homogeneous-(gamma, m) group of DPUs, all
     starting from the same global ``params``.
@@ -400,7 +493,7 @@ def local_train_batched(params, loss_fn: Callable, datasets, *, gamma: int,
                 params, loss_fn, [datasets[j] for j in live], gamma=gamma,
                 m_frac=m_frac, eta=eta, mu=mu,
                 keys=[keys[j] for j in live], backend=backend,
-                keep_planes=keep_planes)
+                kernel_backend=kernel_backend, keep_planes=keep_planes)
             for j, r in zip(live, sub):
                 out[j] = r
         return out
@@ -411,11 +504,13 @@ def local_train_batched(params, loss_fn: Callable, datasets, *, gamma: int,
     return _local_train_batched_plane(params, loss_fn, datasets,
                                       gamma=gamma, m_frac=m_frac, eta=eta,
                                       mu=mu, keys=keys,
-                                      keep_planes=keep_planes)
+                                      keep_planes=keep_planes,
+                                      kernel_backend=kernel_backend)
 
 
 def local_train_multi(anchors, loss_fn: Callable, datasets, *, gamma: int,
                       m_frac: float, eta: float, mu: float, keys,
+                      kernel_backend: str = "auto",
                       keep_planes: bool = True):
     """Grouped local training where every element carries ITS OWN global
     params/anchor — the cross-run hot path of the multi-seed sweep
@@ -436,7 +531,8 @@ def local_train_multi(anchors, loss_fn: Callable, datasets, *, gamma: int,
                for d in datasets), "local_train_multi needs live datasets"
     return _local_train_batched_plane(
         None, loss_fn, datasets, gamma=gamma, m_frac=m_frac, eta=eta,
-        mu=mu, keys=keys, keep_planes=keep_planes, anchors=anchors)
+        mu=mu, keys=keys, keep_planes=keep_planes, anchors=anchors,
+        kernel_backend=kernel_backend)
 
 
 def verify_accumulation_identity(params0, result: LocalResult, *, eta, mu):

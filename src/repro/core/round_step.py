@@ -43,6 +43,9 @@ class CEFLHyper:
     n_micro: int = 1           # microbatches per DPU batch
     agg_schedule: str = "all_reduce"   # all_reduce | reduce_scatter | hierarchical
     grad_dtype: str = "float32"        # accumulated-gradient dtype
+    kernel_backend: str = "auto"       # plane-path kernel dispatch (see
+                                       # kernels/ops.py); "auto" resolves
+                                       # to the process default at build
 
 
 def a_l1(gamma, eta, mu):
@@ -66,9 +69,11 @@ def build_cefl_round_step(loss_fn: Callable, hyper: CEFLHyper):
 
     ``params`` may instead be a :class:`~repro.kernels.plane.ParamPlane`
     with ``(n_dpu, R, LANE)`` data: the round then runs on the flat plane
-    through the fused Pallas kernels (interpret mode on CPU) and returns a
-    ParamPlane — the hot path both executors use.  ``grad_dtype`` applies
-    to the tree path only; planes accumulate in f32 (the master dtype).
+    through the fused kernel ops, dispatched per ``hyper.kernel_backend``
+    (tiled Pallas grids on accelerators, jitted jnp on CPU — see
+    ``kernels/ops.py``), and returns a ParamPlane — the hot path both
+    executors use.  ``grad_dtype`` applies to the tree path only; planes
+    accumulate in f32 (the master dtype).
     """
     eta, mu, theta = hyper.eta, hyper.mu, hyper.theta
     gamma_max, n_micro = hyper.gamma_max, hyper.n_micro
@@ -156,7 +161,7 @@ def build_cefl_round_step(loss_fn: Callable, hyper: CEFLHyper):
         m_v = meta["m_frac"]
         w = meta["weight"].astype(jnp.float32)
         w = w / jnp.sum(w)                    # weight contract: absolute ok
-        interpret = ops.INTERPRET
+        backend = ops.resolve_backend(hyper.kernel_backend)
         mb = jax.tree_util.tree_leaves(batch)[0].shape[2]
         plane_grad = jax.value_and_grad(
             lambda pp, micro, mask: loss_fn(spec.unflatten(pp), micro, mask),
@@ -190,7 +195,7 @@ def build_cefl_round_step(loss_fn: Callable, hyper: CEFLHyper):
                 a_k = jnp.ones((n,), jnp.float32)
             active = (k < gamma_v).astype(jnp.float32)
             p_new, acc = ops.fedprox_accum_plane(
-                p, g, p0, acc, a_k, active, eta, mu, interpret=interpret)
+                p, g, p0, acc, a_k, active, eta, mu, backend=backend)
             return (p_new, acc, losses)
 
         acc0 = jnp.zeros_like(p0)
@@ -200,7 +205,7 @@ def build_cefl_round_step(loss_fn: Callable, hyper: CEFLHyper):
         d = acc / norm[:, None, None]
         # eq. (11): fused weighted reduction + update, every replica row
         new_data = ops.nova_aggregate_plane(p0, d, w, theta * eta,
-                                            interpret=interpret)
+                                            backend=backend)
         metrics = {"loss": jnp.mean(losses)}
         return plane.with_data(new_data), metrics
 

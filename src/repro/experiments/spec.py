@@ -115,6 +115,7 @@ class EngineSpec:
     m_default: float = 0.5
     rate_jitter: float = 0.15
     eval_every: int = 1
+    kernel_backend: str = "auto"    # plane kernel dispatch (kernels/ops.py)
     sanitize: bool = False
 
 
@@ -148,7 +149,8 @@ class ExperimentSpec:
             solver_backend=e.solver_backend,
             gamma_default=e.gamma_default, m_default=e.m_default,
             rate_jitter=e.rate_jitter, seed=int(seed),
-            eval_every=e.eval_every, sanitize=e.sanitize)
+            eval_every=e.eval_every, kernel_backend=e.kernel_backend,
+            sanitize=e.sanitize)
 
     @property
     def run_seeds(self) -> Tuple[int, ...]:

@@ -281,7 +281,8 @@ class VmapSweepExecutor(_LockstepSweep):
                 [mb[3] for mb in members], ctx.loss_fn,
                 [mb[2] for mb in members], gamma=gamma, m_frac=m,
                 eta=eng0.opts.eta, mu=eng0.mu_effective,
-                keys=[mb[4] for mb in members], keep_planes=True)
+                keys=[mb[4] for mb in members], keep_planes=True,
+                kernel_backend=eng0.opts.kernel_backend)
             for (k, j, _, _, _), res in zip(members, out):
                 run_results[k][j] = res
         # per-run aggregation (fused eq.-11 kernel on the plane)

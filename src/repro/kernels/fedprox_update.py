@@ -9,14 +9,26 @@ one VMEM pass.  This op runs every local SGD iteration of every DPU, on
 every parameter — the highest-frequency elementwise hot spot in CE-FL.
 
 Layout: parameters live on the flat parameter plane (see ``plane.py``):
-(R, LANE) f32 with R a multiple of 8.  On TPU the row tile is the largest
-power-of-two multiple of 8 dividing R (capped at ROWS=256): tiles of
-(256, 1024) f32 keep 3 x 1MB operands per step comfortably in VMEM while
-the last dim stays a multiple of the 128-lane register width.  In
-interpret mode (CPU fallback) the grid collapses to a SINGLE whole-array
-block: the interpreter's per-grid-step cost is a full-buffer copy, so one
-fused step is the fast path and the same pallas_call lowers to plain XLA
-elementwise ops under jit.
+(R, LANE) f32 with R a multiple of 8.  Compiled launches run a 2-D
+(row-tile x lane-tile) grid whose block extents come from a
+:class:`~repro.kernels.tiling.TilePlan` — sized against the target
+memory space's byte budget (TPU VMEM / GPU SMEM) from the operand count
+and dtype, with ``pl.cdiv`` grids padding edge blocks when the plane
+extents don't divide the tile.  Mosaic double-buffers the streamed
+blocks (two live copies per operand), so the next tile's DMA overlaps
+the current tile's compute.
+
+In interpret mode (the CPU fallback, ``plan=None``) the grid collapses
+to a SINGLE whole-array block: the interpreter's per-grid-step cost is a
+full-buffer copy, so one fused step is the fast path and the same
+pallas_call lowers to plain XLA elementwise ops under jit.  (Passing an
+explicit tiled ``plan`` with ``interpret=True`` runs the tiled grid in
+the interpreter — that is the parity-test path for the compiled
+decomposition.)
+
+Backend selection — which of these paths a caller gets — lives in ONE
+place: the dispatch layer in ``ops.py``.  Callers should not pick
+``interpret``/``plan`` by hand outside tests.
 
 Two entry points:
 
@@ -30,10 +42,14 @@ Two entry points:
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import TilePlan
 
 LANE = 1024          # last-dim tile (multiple of 128)
 ROWS = 256           # max rows per tile (multiple of 8)
@@ -48,6 +64,22 @@ def row_tile(r: int, cap: int = ROWS) -> int:
     return t
 
 
+def _default_plan(R: int, interpret: bool) -> TilePlan:
+    """The no-plan fallbacks: whole-array block in interpret mode (see
+    module doc), legacy ``row_tile`` decomposition otherwise."""
+    if interpret:    # repro: noqa(RPA004) interpret is a jit-static flag, never a tracer
+        return TilePlan(rows=R, lanes=LANE, backend="interpret")
+    return TilePlan(rows=row_tile(R), lanes=LANE, backend="tpu")
+
+
+def _compiler_params(plan: TilePlan, interpret: bool, semantics):
+    """Mosaic dimension semantics for compiled TPU launches (the grid
+    dims of these kernels are embarrassingly parallel unless marked)."""
+    if interpret or plan.backend != "tpu":    # repro: noqa(RPA004) static flag + static plan metadata
+        return None
+    return pltpu.TPUCompilerParams(dimension_semantics=semantics)
+
+
 def _kernel(x_ref, g_ref, a_ref, eta_ref, mu_ref, o_ref):
     eta = eta_ref[0, 0]
     mu = mu_ref[0, 0]
@@ -59,25 +91,28 @@ def _kernel(x_ref, g_ref, a_ref, eta_ref, mu_ref, o_ref):
     o_ref[...] = upd.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fedprox_update_2d(x, g, anchor, eta, mu, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "plan"))
+def fedprox_update_2d(x, g, anchor, eta, mu, *, interpret: bool = False,
+                      plan: Optional[TilePlan] = None):
     """x, g, anchor: (R, LANE) with R % 8 == 0."""
     R, L = x.shape
     assert L == LANE and R % 8 == 0, (R, L)
-    rows = R if interpret else row_tile(R)
-    grid = (R // rows,)
-    spec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
+    plan = plan or _default_plan(R, interpret)
+    rows, lanes = plan.rows, plan.lanes
+    grid = (pl.cdiv(R, rows), pl.cdiv(L, lanes))
+    spec = pl.BlockSpec((rows, lanes), lambda i, j: (i, j))
+    sspec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
     eta = jnp.asarray(eta, jnp.float32).reshape(1, 1)
     mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[spec, spec, spec,
-                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
-                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        in_specs=[spec, spec, spec, sspec, sspec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
+        compiler_params=_compiler_params(plan, interpret,
+                                         ("parallel", "parallel")),
     )(x, g, anchor, eta, mu)
 
 
@@ -87,18 +122,19 @@ def _accum_kernel(x_ref, g_ref, anc_ref, acc_ref, coef_ref, act_ref,
     mu = mu_ref[0, 0]
     a_k = coef_ref[0, :][:, None, None]         # (gblk, 1, 1)
     act = act_ref[0, :][:, None, None]
-    x = x_ref[...].astype(jnp.float32)          # (gblk, rows, LANE)
+    x = x_ref[...].astype(jnp.float32)          # (gblk, rows, lanes)
     g = g_ref[...].astype(jnp.float32)
-    anc = anc_ref[...].astype(jnp.float32)      # (rows, LANE) or (gblk, ...)
+    anc = anc_ref[...].astype(jnp.float32)      # (rows, lanes) or (gblk, ...)
     upd = x - act * eta * (g + mu * (x - anc))
     ox_ref[...] = upd.astype(ox_ref.dtype)
     oacc_ref[...] = (acc_ref[...].astype(jnp.float32)
                      + (act * a_k) * g).astype(oacc_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "plan"))
 def fedprox_accum_2d(x, g, anchor, acc, coef, active, eta, mu, *,
-                     interpret: bool = False):
+                     interpret: bool = False,
+                     plan: Optional[TilePlan] = None):
     """Batched fused proximal step + eq.-10 accumulation.
 
     x, g, acc: (G, R, LANE); anchor: (R, LANE) shared or (G, R, LANE)
@@ -111,19 +147,21 @@ def fedprox_accum_2d(x, g, anchor, acc, coef, active, eta, mu, *,
     G, R, L = x.shape
     assert L == LANE and R % 8 == 0, (G, R, L)
     assert g.shape == x.shape and acc.shape == x.shape
-    if interpret:
-        gblk, rows = G, R            # one whole-array block (see module doc)
+    plan = plan or _default_plan(R, interpret)
+    if interpret and plan.backend == "interpret":
+        gblk = G                     # one whole-array block (see module doc)
     else:
-        gblk, rows = 1, row_tile(R)  # VMEM-sized tiles, one DPU per step
-    grid = (G // gblk, R // rows)
-    bspec = pl.BlockSpec((gblk, rows, LANE), lambda i, j: (i, j, 0))
+        gblk = 1                     # memory-budget tiles, one DPU per step
+    rows, lanes = min(plan.rows, R), plan.lanes
+    grid = (G // gblk, pl.cdiv(R, rows), pl.cdiv(L, lanes))
+    bspec = pl.BlockSpec((gblk, rows, lanes), lambda i, j, k: (i, j, k))
     if anchor.ndim == 2:
-        aspec = pl.BlockSpec((rows, LANE), lambda i, j: (j, 0))
+        aspec = pl.BlockSpec((rows, lanes), lambda i, j, k: (j, k))
     else:
         assert anchor.shape == x.shape
         aspec = bspec
-    pspec = pl.BlockSpec((1, gblk), lambda i, j: (0, i))  # per-group scalars
-    sspec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    pspec = pl.BlockSpec((1, gblk), lambda i, j, k: (0, i))  # per-DPU scalars
+    sspec = pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
     coef = jnp.asarray(coef, jnp.float32).reshape(1, G)
     active = jnp.asarray(active, jnp.float32).reshape(1, G)
     eta = jnp.asarray(eta, jnp.float32).reshape(1, 1)
@@ -136,4 +174,6 @@ def fedprox_accum_2d(x, g, anchor, acc, coef, active, eta, mu, *,
         out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype),
                    jax.ShapeDtypeStruct(acc.shape, acc.dtype)],
         interpret=interpret,
+        compiler_params=_compiler_params(
+            plan, interpret, ("parallel", "parallel", "parallel")),
     )(x, g, anchor, acc, coef, active, eta, mu)

@@ -1,0 +1,105 @@
+"""Memory-space-aware tile planning for the plane Pallas kernels.
+
+A :class:`TilePlan` is the static 2-D (row-tile x lane-tile) block
+decomposition one ``pallas_call`` runs with.  Plans are sized from the
+target memory space's byte budget, the operand count, and the dtype —
+not from a hardcoded ``row_tile(R)``:
+
+* **tpu** — blocks live in VMEM (~16 MiB/core).  Half the space is
+  reserved for Mosaic's double-buffered pipeline (each streamed operand
+  keeps two live copies so the next block's DMA overlaps compute), so
+  the planner sizes ``n_operands * 2 * rows * lanes * itemsize`` against
+  an 8 MiB budget.
+* **gpu** — blocks stage through SMEM (~192 KiB/SM on recent parts);
+  same sizing rule, much smaller budget, so plans come out with small
+  row tiles and often sub-LANE lane tiles.
+* **interpret** — the CPU interpreter's per-grid-step cost is a full
+  block copy, so the "budget" is unbounded and the plan degenerates to
+  ONE whole-array block (the PR-2 fast path; see
+  ``fedprox_update.py``'s module docstring).
+
+Tiles honor the dtype's minimum TPU tile: the sublane count (second-to-
+last dim) is a multiple of 8 for f32, 16 for bf16, 32 for int8/fp8, and
+the lane count a multiple of 128.  Row/lane extents that don't divide
+the plane use ``pl.cdiv`` grids with padded edge blocks — callers never
+need R to be a multiple of the tile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+
+LANE_MIN = 128        # last-dim tile quantum (vector register width)
+ROW_CAP = 512         # rows per tile beyond which DMA granularity stops helping
+
+# usable bytes per compute block set, per memory space (pipeline-adjusted
+# below via DOUBLE_BUFFER)
+MEMORY_BUDGET_BYTES = {
+    "tpu": 8 * 2 ** 20,       # half of ~16 MiB VMEM/core
+    "gpu": 160 * 2 ** 10,     # conservative SMEM slice per block
+    "interpret": None,        # whole-array single block (see module doc)
+}
+
+DOUBLE_BUFFER = 2             # live copies per streamed operand (pipelining)
+
+
+def sublane(dtype) -> int:
+    """Minimum second-to-last-dim tile for ``dtype`` (TPU packing rule:
+    8 for 4-byte, 16 for 2-byte, 32 for 1-byte types)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """One kernel launch's static block decomposition (hashable, so it
+    can ride through ``jax.jit`` static args)."""
+    rows: int                 # second-to-last-dim block extent
+    lanes: int                # last-dim block extent
+    backend: str = "interpret"    # memory space the plan was sized for
+
+    def block_bytes(self, n_operands: int, dtype=jnp.float32) -> int:
+        """Resident bytes for ``n_operands`` double-buffered blocks."""
+        return (n_operands * DOUBLE_BUFFER * self.rows * self.lanes
+                * jnp.dtype(dtype).itemsize)
+
+
+def _round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+@functools.lru_cache(maxsize=256)
+def plan_tiles(R: int, L: int, *, n_operands: int, dtype=jnp.float32,
+               backend: str = "tpu") -> TilePlan:
+    """Largest (rows, lanes) tile whose ``n_operands`` double-buffered
+    blocks fit the ``backend`` memory budget.
+
+    ``n_operands`` counts every block resident per grid step: streamed
+    inputs, outputs, and scratch accumulators (a stacked block counts
+    once per stack element).  Shrinks rows first (halving, floored at
+    the dtype sublane), then lanes (halving, floored at 128).
+    """
+    if backend not in MEMORY_BUDGET_BYTES:
+        raise ValueError(f"no memory budget for backend {backend!r}; "
+                         f"known: {sorted(MEMORY_BUDGET_BYTES)}")
+    budget = MEMORY_BUDGET_BYTES[backend]
+    if budget is None:
+        return TilePlan(rows=R, lanes=L, backend=backend)
+    sub = sublane(dtype)
+    itemsize = jnp.dtype(dtype).itemsize
+    rows = min(_round_up(R, sub), ROW_CAP)
+    lanes = min(_round_up(L, LANE_MIN), L if L % LANE_MIN == 0 else
+                _round_up(L, LANE_MIN))
+
+    def fits(r, ln):
+        return n_operands * DOUBLE_BUFFER * r * ln * itemsize <= budget
+
+    while not fits(rows, lanes) and rows > sub:
+        rows = max(sub, rows // 2 // sub * sub)
+    while not fits(rows, lanes) and lanes > LANE_MIN:
+        lanes = max(LANE_MIN, lanes // 2 // LANE_MIN * LANE_MIN)
+    return TilePlan(rows=min(rows, _round_up(R, sub)),
+                    lanes=min(lanes, _round_up(L, LANE_MIN)),
+                    backend=backend)

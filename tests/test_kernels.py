@@ -1,14 +1,21 @@
 """Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (ref.py),
-interpret=True on CPU."""
+interpret=True on CPU.  The tiled-plan tests run the compiled grid
+decomposition (explicit TilePlan) in the interpreter — the parity
+substrate for the accelerator launches."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.fedprox_update import LANE, ROWS, fedprox_update_2d
-from repro.kernels.nova_aggregate import nova_aggregate_2d
+from repro.kernels.fedprox_update import LANE, ROWS, fedprox_accum_2d, \
+    fedprox_update_2d
+from repro.kernels.nova_aggregate import nova_aggregate_2d, \
+    nova_aggregate_stacked_2d
 from repro.kernels.swa_decode_attention import swa_decode_attention
+from repro.kernels.tiling import (DOUBLE_BUFFER, LANE_MIN,
+                                  MEMORY_BUDGET_BYTES, TilePlan, plan_tiles,
+                                  sublane)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -53,6 +60,134 @@ def test_swa_decode_kernel_sweep(dtype, shape, cache_len_frac):
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), atol=tol)
+
+
+# ------------------------------------------------ tiled-grid parity -----
+# Explicit TilePlans run the compiled 2-D block decomposition (pl.cdiv
+# padded edge grids, gblk=1 DPU streaming, scratch grid-accumulation) in
+# the interpreter, where it must match the oracles bit-for-bit in f32.
+
+TILED = TilePlan(rows=16, lanes=512, backend="tpu")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows", [16, 24, 40])   # 24, 40: padded edge rows
+def test_fedprox_tiled_plan_parity(dtype, rows):
+    x = jax.random.normal(KEY, (rows, LANE)).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), (rows, LANE)).astype(dtype)
+    a = jax.random.normal(jax.random.PRNGKey(2), (rows, LANE)).astype(dtype)
+    out = fedprox_update_2d(x, g, a, 0.1, 0.05, interpret=True, plan=TILED)
+    exp = ref.fedprox_update_ref(x, g, a, 0.1, 0.05)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("anchor_form", ["shared", "per_dpu"])
+@pytest.mark.parametrize("rows", [16, 24])
+def test_fedprox_accum_tiled_plan_parity(anchor_form, rows):
+    """The batched G-axis kernel on the tiled (gblk=1) grid, with both
+    the shared anchor and the per-DPU anchor form ``VmapSweepExecutor``
+    uses (every sweep member anchors at its own round-start params)."""
+    G = 3
+    x = jax.random.normal(KEY, (G, rows, LANE))
+    g = jax.random.normal(jax.random.PRNGKey(1), (G, rows, LANE))
+    anchor = (x * 0.9 if anchor_form == "per_dpu"
+              else jax.random.normal(jax.random.PRNGKey(2), (rows, LANE)))
+    acc = jax.random.normal(jax.random.PRNGKey(3), (G, rows, LANE))
+    coef = jnp.asarray([1.0, 0.5, 0.25])
+    active = jnp.asarray([1.0, 1.0, 0.0])
+    out = fedprox_accum_2d(x, g, anchor, acc, coef, active, 0.1, 0.05,
+                           interpret=True, plan=TILED)
+    exp = ref.fedprox_accum_ref(x, g, anchor, acc, coef, active, 0.1, 0.05)
+    for o, e in zip(out, exp):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(e), atol=1e-6)
+
+
+@pytest.mark.parametrize("rows", [16, 24])
+@pytest.mark.parametrize("n_dpu", [1, 5])
+def test_nova_tiled_plan_parity(rows, n_dpu):
+    """Grid accumulation over the DPU axis (scratch zero-init under
+    @pl.when(k==0), flush at k==n-1) vs the einsum oracle."""
+    x = jax.random.normal(KEY, (rows, LANE))
+    d = jax.random.normal(jax.random.PRNGKey(1), (n_dpu, rows, LANE))
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (n_dpu,))) + 0.1
+    wn = w / jnp.sum(w)
+    out = nova_aggregate_2d(x, d, wn, 0.05, interpret=True, plan=TILED)
+    exp = ref.nova_aggregate_ref(x, d, wn, 0.05)
+    np.testing.assert_allclose(out, exp, atol=1e-5)
+    xs = jnp.broadcast_to(x[None], (n_dpu, rows, LANE))
+    outs = nova_aggregate_stacked_2d(xs, d, wn, 0.05, interpret=True,
+                                     plan=TILED)
+    exps = ref.nova_aggregate_ref(xs, d, wn, 0.05)
+    np.testing.assert_allclose(outs, exps, atol=1e-5)
+
+
+# -------------------------------------------------- tiling planner -----
+
+@pytest.mark.parametrize("backend", ["tpu", "gpu"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n_operands", [4, 6, 18])
+def test_plan_tiles_fits_budget(backend, dtype, n_operands):
+    plan = plan_tiles(2048, 1024, n_operands=n_operands, dtype=dtype,
+                      backend=backend)
+    budget = MEMORY_BUDGET_BYTES[backend]
+    assert plan.block_bytes(n_operands, dtype) <= budget
+    assert plan.rows % sublane(dtype) == 0
+    assert plan.lanes % LANE_MIN == 0
+    assert plan.backend == backend
+
+
+def test_plan_tiles_interpret_is_whole_array():
+    plan = plan_tiles(2048, 1024, n_operands=6, backend="interpret")
+    assert (plan.rows, plan.lanes) == (2048, 1024)
+
+
+def test_plan_tiles_is_jit_static():
+    """Plans are hashable and cached — usable as jit static args."""
+    a = plan_tiles(256, 1024, n_operands=4, backend="tpu")
+    b = plan_tiles(256, 1024, n_operands=4, backend="tpu")
+    assert a is b and hash(a) == hash(b)
+    assert plan_tiles(256, 1024, n_operands=4, backend="gpu") != a
+    with pytest.raises(ValueError):
+        plan_tiles(256, 1024, n_operands=4, backend="mainframe")
+
+
+# ---------------------------------------------- backend dispatch -----
+
+def test_backend_dispatch_no_retrace(assert_no_retrace):
+    """Round-over-round calls through the dispatch layer must hit the
+    jit caches — backend resolution happens at trace time and must not
+    leak anything retrace-inducing into the traced graph."""
+    x = jax.random.normal(KEY, (3, 16, LANE))
+    acc = jnp.zeros_like(x)
+    coef = jnp.ones((3,))
+    w = jnp.full((3,), 1 / 3)
+
+    @jax.jit
+    def round_like(x, acc):
+        x1, a1 = ops.fedprox_accum_plane(x, x * 0.1, x, acc, coef, coef,
+                                         0.1, 0.01)
+        return ops.nova_aggregate_plane(x1, a1, w, 0.05)
+
+    out = round_like(x, acc)          # warmup: compiles here are fine
+    with assert_no_retrace():
+        for _ in range(3):
+            out = round_like(out, acc)
+    assert out.shape == x.shape
+
+
+def test_backend_dispatch_cpu_matches_interpret():
+    """The "cpu" jitted-ref path is bitwise equal to interpret mode (the
+    kernel bodies are expression-identical), eagerly and under jit."""
+    x = jax.random.normal(KEY, (16, LANE))
+    g, a = x * 0.1, x * 0.9
+    cpu = ops.fedprox_plane(x, g, a, 0.1, 0.01, backend="cpu")
+    itp = ops.fedprox_plane(x, g, a, 0.1, 0.01, backend="interpret")
+    jit_cpu = jax.jit(lambda *t: ops.fedprox_plane(*t, 0.1, 0.01,
+                                                   backend="cpu"))(x, g, a)
+    np.testing.assert_array_equal(np.asarray(cpu), np.asarray(itp))
+    np.testing.assert_array_equal(np.asarray(cpu), np.asarray(jit_cpu))
 
 
 def test_ops_pytree_roundtrip():
