@@ -94,3 +94,51 @@ def fednova_aggregate(x_t, d_list: List, weights: Sequence[float],
     p = normalize_weights(weights)
     tau_eff = float(jnp.sum(p * jnp.asarray(gammas, jnp.float32)))
     return aggregate(x_t, d_list, weights, theta=tau_eff, eta=eta)
+
+
+# ------------------------------------------- byzantine-robust counters --
+
+def _robust_kwargs(n: int, mode: str, trim_frac: float) -> dict:
+    if mode not in ops.ROBUST_MODES:
+        raise ValueError(
+            f"unknown robust mode {mode!r}; known: {ops.ROBUST_MODES}")
+    median = mode == "median"
+    return {"k": 0 if median else ops.trim_count(n, trim_frac),
+            "median": median}
+
+
+def robust_aggregate(x_t, d_list: List, *, theta: float, eta: float,
+                     mode: str = "trimmed_mean", trim_frac: float = 0.1):
+    """eq. 11 with the weighted sum replaced by a coordinate-wise trimmed
+    mean / median over the d_i stack — the byzantine counter
+    (``EngineOptions.robust_agg``).  Deliberately takes NO weights: the
+    D_i a compromised client reports are not trusted."""
+    from repro.kernels import ref as _ref
+    if isinstance(x_t, ParamPlane):
+        out = ops.robust_aggregate_plane(
+            x_t.data, _stack_planes(d_list), theta * eta, mode=mode,
+            trim_frac=trim_frac)
+        return x_t.with_data(out)
+    kw = _robust_kwargs(len(d_list), mode, trim_frac)
+    return jax.tree_util.tree_map(
+        lambda xl, *dl: _ref.robust_aggregate_ref(
+            xl, jnp.stack(dl), theta * eta, **kw), x_t, *d_list)
+
+
+def robust_fedavg_aggregate(local_params: List, *,
+                            mode: str = "trimmed_mean",
+                            trim_frac: float = 0.1):
+    """Robust FedAvg: coordinate-wise trimmed-mean/median of the local
+    models (Yin et al. 2018), reusing the fused kernel with x = 0 and
+    theta_eta = -1 so x_new = reduce(stack)."""
+    from repro.kernels import ref as _ref
+    if isinstance(local_params[0], ParamPlane):
+        stack = _stack_planes(local_params)
+        zero = jnp.zeros(stack.shape[1:], stack.dtype)
+        return local_params[0].with_data(
+            ops.robust_aggregate_plane(zero, stack, -1.0, mode=mode,
+                                       trim_frac=trim_frac))
+    kw = _robust_kwargs(len(local_params), mode, trim_frac)
+    return jax.tree_util.tree_map(
+        lambda *pl_: _ref.robust_reduce_ref(jnp.stack(pl_), **kw),
+        *local_params)

@@ -71,6 +71,15 @@ class EngineOptions:
                                     # key-reuse detection across the loop.
                                     # Debug aid — adds a device sync per
                                     # round, keep off in benchmarks
+    robust_agg: str = "none"        # byzantine-robust aggregation counter:
+                                    # "none" (weighted eq. 11), or
+                                    # "trimmed_mean" / "median" — the
+                                    # UNWEIGHTED coordinate-wise robust
+                                    # reduce (core.aggregation.
+                                    # robust_aggregate) over the DPU stack
+    trim_frac: float = 0.1          # trim fraction per side for
+                                    # robust_agg="trimmed_mean" (k =
+                                    # min(floor(n*frac), (n-1)//2))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -132,8 +132,24 @@ def _plan_settings(plan: RoundPlan):
 
 
 def _aggregate(params, results, agg: str, *, eta: float,
-               theta: Optional[float]):
+               theta: Optional[float], robust: str = "none",
+               trim_frac: float = 0.1):
     weights = [r.num_examples for r in results]
+    if robust != "none":
+        # byzantine counter: coordinate-wise trimmed-mean/median instead
+        # of the weighted sum.  Deliberately weight-free — and theta
+        # (when not pinned) is the UNWEIGHTED gamma mean, because the
+        # D_i a compromised client reports are not trusted either.
+        if agg == "fedavg":
+            return aggregation.robust_fedavg_aggregate(
+                [r.params for r in results], mode=robust,
+                trim_frac=trim_frac)
+        theta_val = float(theta) if (agg != "fednova"
+                                     and theta is not None) \
+            else float(np.mean([r.gamma for r in results]))
+        return aggregation.robust_aggregate(
+            params, [r.d_i for r in results], theta=theta_val, eta=eta,
+            mode=robust, trim_frac=trim_frac)
     if agg == "fedavg":
         return aggregation.fedavg_aggregate(
             [r.params for r in results], weights)
@@ -147,6 +163,48 @@ def _aggregate(params, results, agg: str, *, eta: float,
         np.sum(wn * np.array([r.gamma for r in results])))   # tau_eff
     return aggregation.aggregate(params, [r.d_i for r in results], weights,
                                  theta=theta_val, eta=eta)
+
+
+def _corrupt_value(x, fn):
+    """Apply a plane-space transform to a ParamPlane or pytree value."""
+    plane = as_plane(x)
+    out = plane.with_data(fn(plane.data))
+    return out if isinstance(x, ParamPlane) else out.to_tree()
+
+
+def corrupt_local_results(results, live, corrupt, anchor, noise_key):
+    """Apply the round's update corruptions (``ScenarioEvents.corrupted``
+    triples ``(ue, mode, scale)``) to the matching ``LocalResult``s, in
+    place, between local training and aggregation.
+
+    sign_flip: d_i -> -scale * d_i and params -> anchor - scale *
+    (params - anchor) (the anchor-relative flip, so fedavg model
+    averaging sees the same attack direction eq.-11 does).  gauss: adds
+    scale-std Gaussian noise to both, with per-target subkeys split off
+    ``noise_key`` in deterministic (sorted) order.
+    """
+    by_dpu = {i: j for j, (i, _) in enumerate(live)}
+    todo = [c for c in sorted(corrupt) if c[0] in by_dpu]
+    n_gauss = sum(1 for _, mode, _ in todo if mode == "gauss")
+    nkeys = iter(jax.random.split(noise_key, 2 * n_gauss)) if n_gauss \
+        else iter(())
+    anchor_data = as_plane(anchor).data
+    for ue, mode, scale in todo:
+        r = results[by_dpu[ue]]
+        if mode == "sign_flip":
+            r.d_i = _corrupt_value(r.d_i, lambda d: -scale * d)
+            r.params = _corrupt_value(
+                r.params, lambda p: anchor_data - scale * (p - anchor_data))
+        elif mode == "gauss":
+            kd, kp = next(nkeys), next(nkeys)
+            r.d_i = _corrupt_value(
+                r.d_i, lambda d: d + scale * jax.random.normal(
+                    kd, d.shape, d.dtype))
+            r.params = _corrupt_value(
+                r.params, lambda p: p + scale * jax.random.normal(
+                    kp, p.shape, p.dtype))
+        else:
+            raise ValueError(f"unknown corruption mode {mode!r}")
 
 
 @dataclasses.dataclass
@@ -190,7 +248,8 @@ class SimExecutor:
 
     def run_round(self, params, plan: RoundPlan, datasets, *, loss_fn,
                   eta: float, mu: float, theta: Optional[float], agg: str,
-                  key, eval_fn=None):
+                  key, eval_fn=None, corrupt=(), robust_agg: str = "none",
+                  trim_frac: float = 0.1):
         backend = "plane" if self.use_plane else "tree"
         if self.use_plane:
             params = as_plane(params)
@@ -200,7 +259,12 @@ class SimExecutor:
         if not live:
             out = (params, float("nan"))
             return out + (None,) if eval_fn is not None else out
-        keys = jax.random.split(key, len(live))
+        # gaussian update corruption needs one extra key; clean rounds
+        # keep the historical split count so existing seeded traces are
+        # unchanged bit for bit
+        needs_noise = any(mode == "gauss" for _, mode, _ in corrupt)
+        keys = jax.random.split(key, len(live) + (1 if needs_noise else 0))
+        noise_key = keys[len(live)] if needs_noise else None
         results = [None] * len(live)
         if self.batch_homogeneous:
             groups: Dict[tuple, list] = {}
@@ -210,7 +274,8 @@ class SimExecutor:
                 groups.setdefault(
                     (int(gammas[i]), float(ms[i]), bucket), []).append(j)
             if (self.fuse_round and self.use_plane and len(groups) == 1
-                    and agg in ("cefl", "fednova")):
+                    and agg in ("cefl", "fednova")
+                    and not corrupt and robust_agg == "none"):
                 # single homogeneous group: the whole round (train +
                 # aggregate [+ eval]) is ONE jitted program
                 (gamma, m, _bucket), idxs = next(iter(groups.items()))
@@ -245,7 +310,10 @@ class SimExecutor:
                     m_frac=float(ms[i]), eta=eta, mu=mu, key=keys[j],
                     backend=backend, keep_planes=self.use_plane,
                     kernel_backend=self.kernel_backend)
-        new_params = _aggregate(params, results, agg, eta=eta, theta=theta)
+        if corrupt:
+            corrupt_local_results(results, live, corrupt, params, noise_key)
+        new_params = _aggregate(params, results, agg, eta=eta, theta=theta,
+                                robust=robust_agg, trim_frac=trim_frac)
         mean_loss = weighted_mean([r.loss for r in results],
                                   [r.num_examples for r in results])
         if eval_fn is not None:
@@ -306,12 +374,18 @@ class MeshExecutor:
 
     def run_round(self, params, plan: RoundPlan, datasets, *, loss_fn,
                   eta: float, mu: float, theta: Optional[float], agg: str,
-                  key):
-        del key  # deterministic leading-slice mini-batches
+                  key, corrupt=(), robust_agg: str = "none",
+                  trim_frac: float = 0.1):
+        del key, trim_frac  # deterministic leading-slice mini-batches
         if agg == "fedavg":
             raise NotImplementedError(
                 "MeshExecutor aggregates accumulated gradients (eq. 11); "
                 "FedAvg model averaging needs SimExecutor")
+        if corrupt or robust_agg != "none":
+            raise NotImplementedError(
+                "update corruption / robust aggregation run between local "
+                "training and aggregation, which the fused SPMD round "
+                "step does not expose; use SimExecutor")
         gammas, ms = _plan_settings(plan)
         live = [(i, d) for i, d in enumerate(datasets)
                 if d is not None and len(d["y"])]
@@ -562,6 +636,42 @@ class Engine:
         every = max(1, getattr(self.opts, "eval_every", 1))
         return t % every == 0 or t == self.opts.rounds - 1
 
+    def execute_round(self, state: LoopState, staged: StagedRound, *,
+                      fuse_eval: bool = True):
+        """Device phase of round ``staged.t``: executor dispatch with the
+        round's adversary corruptions and the configured robust
+        aggregation threaded through.  Updates ``state.params`` and
+        returns ``(mean_loss, acc)`` — ``acc`` is None unless the round
+        fused its eval.  The single source of truth for the executor
+        call: ``_run_loop``, the sweep executors, and the scenario fuzzer
+        all route through here."""
+        opts = self.opts
+        kw = {}
+        corrupt = tuple(getattr(staged.events, "corrupted", ()) or ())
+        if corrupt or opts.robust_agg != "none":
+            # passed only when active so custom executors with the
+            # pre-adversary run_round signature keep working on clean runs
+            kw["corrupt"] = corrupt
+            kw["robust_agg"] = opts.robust_agg
+            kw["trim_frac"] = opts.trim_frac
+        if (fuse_eval and state.eval_fn is not None
+                and self.should_eval(staged.t)
+                and getattr(self.executor, "fused_eval", False)):
+            # fuse the eval forward pass into the round program; the
+            # executor returns acc=None if the round couldn't fuse
+            # (finish_round then evaluates separately)
+            kw["eval_fn"] = state.eval_fn
+        out = self.executor.run_round(
+            state.params, staged.plan, staged.datasets,
+            loss_fn=state.loss_fn, eta=opts.eta, mu=self.mu_effective,
+            theta=opts.theta, agg=self.aggregation, key=staged.key, **kw)
+        if "eval_fn" in kw:
+            state.params, mean_loss, acc = out
+        else:
+            state.params, mean_loss = out
+            acc = None
+        return mean_loss, acc
+
     def finish_round(self, state: LoopState, staged: StagedRound,
                      mean_loss: float, acc: Optional[float] = None) -> \
             RoundReport:
@@ -569,7 +679,16 @@ class Engine:
         the precomputed ``acc`` a sweep executor hands in), report,
         callbacks.  Advances ``state.t``."""
         plan = staged.plan
-        costs = network_costs(plan.to_w(), staged.net_t, staged.D_bar)
+        w = plan.to_w()
+        scale = tuple(getattr(staged.events, "compute_scale", ()) or ())
+        if scale:
+            # stragglers: the plan's idealized f_n vs the realized rate —
+            # the slowdown is charged through the Sec. II-E cost model
+            # (compute delay ~ 1/f_n, compute energy ~ f_n^2)
+            w = dict(w)
+            w["f_n"] = jnp.asarray(w["f_n"]) * jnp.asarray(
+                scale, jnp.float32)
+        costs = network_costs(w, staged.net_t, staged.D_bar)
         E = float(round_energy(costs, self.ow.xi3_sub))
         Dl = float(round_delay(costs))
         state.cum_E += E
@@ -639,23 +758,7 @@ class Engine:
     def _run_loop(self, state: LoopState, online_datasets) -> RunResult:
         while state.t < self.opts.rounds and not state.stopped:
             staged = self.begin_round(state, online_datasets)
-            kw = {}
-            if (state.eval_fn is not None and self.should_eval(staged.t)
-                    and getattr(self.executor, "fused_eval", False)):
-                # fuse the eval forward pass into the round program; the
-                # executor returns acc=None if the round couldn't fuse
-                # (finish_round then evaluates separately)
-                kw["eval_fn"] = state.eval_fn
-            out = self.executor.run_round(
-                state.params, staged.plan, staged.datasets,
-                loss_fn=state.loss_fn, eta=self.opts.eta,
-                mu=self.mu_effective, theta=self.opts.theta,
-                agg=self.aggregation, key=staged.key, **kw)
-            acc = None
-            if "eval_fn" in kw:
-                state.params, mean_loss, acc = out
-            else:
-                state.params, mean_loss = out
+            mean_loss, acc = self.execute_round(state, staged)
             self.finish_round(state, staged, mean_loss, acc)
         return RunResult(reports=state.reports,
                          params=as_tree(state.params))

@@ -117,6 +117,9 @@ class EngineSpec:
     eval_every: int = 1
     kernel_backend: str = "auto"    # plane kernel dispatch (kernels/ops.py)
     sanitize: bool = False
+    robust_agg: str = "none"        # byzantine counter: "none" /
+                                    # "trimmed_mean" / "median"
+    trim_frac: float = 0.1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,7 +153,8 @@ class ExperimentSpec:
             gamma_default=e.gamma_default, m_default=e.m_default,
             rate_jitter=e.rate_jitter, seed=int(seed),
             eval_every=e.eval_every, kernel_backend=e.kernel_backend,
-            sanitize=e.sanitize)
+            sanitize=e.sanitize, robust_agg=e.robust_agg,
+            trim_frac=e.trim_frac)
 
     @property
     def run_seeds(self) -> Tuple[int, ...]:

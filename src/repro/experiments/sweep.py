@@ -34,7 +34,8 @@ import numpy as np
 
 from repro.core import fedprox
 from repro.core.api import RunResult, weighted_mean
-from repro.core.engine import SimExecutor, _aggregate, _plan_settings
+from repro.core.engine import (SimExecutor, _aggregate, _plan_settings,
+                               corrupt_local_results)
 from repro.experiments import runstate
 from repro.experiments.build import ExperimentContext
 from repro.experiments.spec import to_json
@@ -218,13 +219,12 @@ class SequentialSweepExecutor(_LockstepSweep):
 
     def _device_phase(self, ctx, active, staged) -> None:
         for run, st in zip(active, staged):
-            engine = run.engine
-            run.state.params, mean_loss = engine.executor.run_round(
-                run.state.params, st.plan, st.datasets,
-                loss_fn=run.state.loss_fn, eta=engine.opts.eta,
-                mu=engine.mu_effective, theta=engine.opts.theta,
-                agg=engine.aggregation, key=st.key)
-            engine.finish_round(run.state, st, mean_loss)
+            # fuse_eval=False keeps the historical sweep behavior: the
+            # eval runs separately in finish_round (bit-identical result,
+            # pinned against the vmapped executor's batched eval)
+            mean_loss, acc = run.engine.execute_round(
+                run.state, st, fuse_eval=False)
+            run.engine.finish_round(run.state, st, mean_loss, acc)
 
 
 class VmapSweepExecutor(_LockstepSweep):
@@ -258,6 +258,7 @@ class VmapSweepExecutor(_LockstepSweep):
         groups: Dict[tuple, list] = {}
         run_results = [[None] * 0 for _ in active]
         live_per_run = []
+        noise_keys = [None] * len(active)
         for k, (run, st) in enumerate(zip(active, staged)):
             plan = st.plan
             gammas, ms = _plan_settings(plan)
@@ -267,7 +268,15 @@ class VmapSweepExecutor(_LockstepSweep):
             run_results[k] = [None] * len(live)
             if not live:
                 continue
-            keys = jax.random.split(st.key, len(live))
+            # same split count as SimExecutor.run_round: one extra key
+            # only when this run's round has gaussian corruption, so the
+            # vmap executor stays bit-exact vs the sequential one
+            corrupt = tuple(getattr(st.events, "corrupted", ()) or ())
+            needs_noise = any(mode == "gauss" for _, mode, _ in corrupt)
+            keys = jax.random.split(
+                st.key, len(live) + (1 if needs_noise else 0))
+            if needs_noise:
+                noise_keys[k] = keys[len(live)]
             anchor = as_plane(run.state.params)
             for j, (i, d) in enumerate(live):
                 bucket = fedprox._bucket(
@@ -285,7 +294,9 @@ class VmapSweepExecutor(_LockstepSweep):
                 kernel_backend=eng0.opts.kernel_backend)
             for (k, j, _, _, _), res in zip(members, out):
                 run_results[k][j] = res
-        # per-run aggregation (fused eq.-11 kernel on the plane)
+        # per-run aggregation (fused eq.-11 kernel on the plane), with
+        # the round's corruptions applied first and the engine's robust
+        # counter threaded through — same order as SimExecutor.run_round
         mean_losses = []
         for k, (run, st) in enumerate(zip(active, staged)):
             engine = run.engine
@@ -293,9 +304,16 @@ class VmapSweepExecutor(_LockstepSweep):
             if not results:
                 mean_losses.append(float("nan"))
                 continue
+            anchor = as_plane(run.state.params)
+            corrupt = tuple(getattr(st.events, "corrupted", ()) or ())
+            if corrupt:
+                corrupt_local_results(results, live_per_run[k], corrupt,
+                                      anchor, noise_keys[k])
             run.state.params = _aggregate(
-                as_plane(run.state.params), results, engine.aggregation,
-                eta=engine.opts.eta, theta=engine.opts.theta)
+                anchor, results, engine.aggregation,
+                eta=engine.opts.eta, theta=engine.opts.theta,
+                robust=engine.opts.robust_agg,
+                trim_frac=engine.opts.trim_frac)
             mean_losses.append(weighted_mean(
                 [r.loss for r in results],
                 [r.num_examples for r in results]))

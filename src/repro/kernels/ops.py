@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from repro.kernels import fedprox_update as _fp
 from repro.kernels import nova_aggregate as _na
 from repro.kernels import ref as _ref
+from repro.kernels import robust_aggregate as _ra
 from repro.kernels.plane import FlatSpec, ParamPlane, spec_of  # noqa: F401
 from repro.kernels.swa_decode_attention import swa_decode_attention  # noqa: F401
 from repro.kernels.tiling import TilePlan, plan_tiles  # noqa: F401
@@ -140,6 +141,18 @@ def _plan_for(backend: str, R: int, L: int, *, n_operands: int, dtype):
 _fedprox_plane_cpu = jax.jit(_ref.fedprox_update_ref)
 _fedprox_accum_cpu = jax.jit(_ref.fedprox_accum_ref)
 _nova_plane_cpu = jax.jit(_ref.nova_aggregate_ref)
+_robust_plane_cpu = jax.jit(_ref.robust_aggregate_ref,
+                            static_argnames=("k", "median"))
+
+ROBUST_MODES = ("trimmed_mean", "median")
+
+
+def trim_count(n_dpu: int, trim_frac: float) -> int:
+    """Per-side trim count for an n_dpu stack: floor(n * frac), clamped so
+    at least one value survives (2k < n)."""
+    if not 0.0 <= trim_frac < 0.5:
+        raise ValueError(f"trim_frac must be in [0, 0.5), got {trim_frac}")
+    return min(int(n_dpu * trim_frac), (n_dpu - 1) // 2)
 
 
 def _tracing(*xs) -> bool:
@@ -225,6 +238,34 @@ def nova_aggregate_plane(x, d_stack, weights, theta_eta, *,
     plan = _plan_for(b, *x.shape, n_operands=4, dtype=x.dtype)
     return _na.nova_aggregate_2d(x, d_stack, weights, theta_eta,
                                  interpret=itp, plan=plan)
+
+
+def robust_aggregate_plane(x, d_stack, theta_eta, *,
+                           mode: str = "trimmed_mean",
+                           trim_frac: float = 0.1,
+                           interpret: Optional[bool] = None,
+                           backend: Optional[str] = None):
+    """Byzantine-robust eq. 11 on planes: x - theta_eta * reduce(d_stack)
+    with a coordinate-wise trimmed mean (``mode="trimmed_mean"``) or
+    median (``mode="median"``) over the DPU axis.  UNWEIGHTED by design —
+    dataset-size weights are the lever a byzantine client inflates."""
+    if mode not in ROBUST_MODES:
+        raise ValueError(
+            f"unknown robust mode {mode!r}; known: {ROBUST_MODES}")
+    median = mode == "median"
+    k = 0 if median else trim_count(d_stack.shape[0], trim_frac)
+    b = resolve_backend(backend, interpret)
+    if b == "cpu":
+        if _tracing(x, d_stack):
+            return _ref.robust_aggregate_ref(x, d_stack, theta_eta,
+                                             k=k, median=median)
+        return _robust_plane_cpu(x, d_stack, theta_eta, k=k, median=median)
+    # the sort needs the full DPU stack resident per (rows, lanes) tile
+    plan = _plan_for(b, *x.shape, n_operands=d_stack.shape[0] + 3,
+                     dtype=x.dtype)
+    return _ra.robust_aggregate_2d(x, d_stack, theta_eta, k=k,
+                                   median=median, interpret=(b == "interpret"),
+                                   plan=plan)
 
 
 # ------------------------------------------------------- tree level -----

@@ -34,6 +34,32 @@ def nova_aggregate_ref(x, d_stack, weights, theta_eta):
     return (x.astype(jnp.float32) - theta_eta * agg).astype(x.dtype)
 
 
+def robust_reduce_ref(d_stack, *, k: int = 0, median: bool = False):
+    """Coordinate-wise robust location estimate over the DPU axis.
+
+    ``median=True``: the coordinate-wise median; otherwise the k-trimmed
+    mean (drop the k smallest and k largest per coordinate — requires
+    2k < n).  Unweighted by design: dataset-size weights are exactly the
+    lever a byzantine client can inflate.
+    """
+    d = jnp.sort(d_stack.astype(jnp.float32), axis=0)
+    n = d.shape[0]
+    if median:
+        mid = n // 2
+        return d[mid] if n % 2 else 0.5 * (d[mid - 1] + d[mid])
+    if not 0 <= 2 * k < n:
+        raise ValueError(f"trim k={k} needs 0 <= 2k < n={n}")
+    return jnp.mean(d[k:n - k], axis=0)
+
+
+def robust_aggregate_ref(x, d_stack, theta_eta, *, k: int = 0,
+                         median: bool = False):
+    """eq. 11 with the weighted sum replaced by a robust reduce:
+    x - theta*eta*robust_reduce(d_stack)."""
+    red = robust_reduce_ref(d_stack, k=k, median=median)
+    return (x.astype(jnp.float32) - theta_eta * red).astype(x.dtype)
+
+
 def swa_decode_attention_ref(q, k_cache, v_cache, cache_len):
     B, Hq, D = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]

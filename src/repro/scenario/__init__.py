@@ -1,6 +1,10 @@
 # Dynamic-environment subsystem: per-round network + data evolution
-# (mobility, handover, mesh churn, drift schedules) behind one protocol.
+# (mobility, handover, mesh churn, drift schedules, adversary models)
+# behind one protocol.
 from repro.scenario import presets  # noqa: F401  (registers the built-ins)
+from repro.scenario.adversary import (  # noqa: F401
+    ByzantineUpdate, Dropout, LabelPoison, Straggler,
+)
 from repro.scenario.base import (  # noqa: F401
     Scenario, ScenarioEvents, StaticScenario, available_scenarios,
     get_scenario, register_scenario,

@@ -25,13 +25,20 @@ from typing import Callable, Dict, List, Protocol, Sequence, Tuple, \
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioEvents:
-    """What the environment did this round (consumed by ``RoundReport``)."""
+    """What the environment did this round (consumed by ``RoundReport``
+    and, for the adversarial channels, by the executors / cost model)."""
     round: int
     handovers: Tuple[Tuple[int, int, int], ...] = ()  # (ue, old_bs, new_bs)
     joined: Tuple[int, ...] = ()                      # UEs back online
     left: Tuple[int, ...] = ()                        # UEs gone offline
     mesh_down: Tuple[Tuple[int, int], ...] = ()       # DC-DC links in outage
     active_ues: int = -1
+    # adversary channels (scenario/adversary.py): update corruptions the
+    # executor applies between local training and aggregation, and the
+    # per-UE realized compute-rate scaling finish_round charges through
+    # the cost model (empty tuples = clean round)
+    corrupted: Tuple[Tuple[int, str, float], ...] = ()  # (ue, mode, scale)
+    compute_scale: Tuple[float, ...] = ()               # (N,) f_n scaling
 
 
 @runtime_checkable

@@ -50,6 +50,13 @@ class LabelRotation:
         x, y = _as_np(data)
         return {"x": x, "y": (y + k) % self.num_classes}
 
+    # stateless: the rotation is a pure function of the round index
+    def state_dict(self):
+        return {}
+
+    def load_state_dict(self, d):
+        pass
+
 
 @dataclasses.dataclass
 class ArrivalBurst:
@@ -70,10 +77,21 @@ class ArrivalBurst:
         D = len(y)
         if D == 0:
             return data
-        n = max(1, int(round(D * self.factor)))
+        n = int(round(D * self.factor))
+        if self.factor > 0.0:
+            n = max(1, n)           # a lull never silences a UE entirely
+        if n == 0:
+            return empty_like(data)  # factor=0: a true zero-arrival window
         idx = rng.choice(D, size=n, replace=True) if n > D \
             else rng.permutation(D)[:n]
         return {"x": x[idx], "y": y[idx]}
+
+    # stateless: window membership is a pure function of the round index
+    def state_dict(self):
+        return {}
+
+    def load_state_dict(self, d):
+        pass
 
 
 @dataclasses.dataclass
@@ -116,7 +134,9 @@ class JoinLeave:
     def state_dict(self):
         if self._active is None:
             return {"initialized": 0}
-        return {"initialized": 1, "active": np.asarray(self._active),
+        # copy: ``begin_round`` mutates ``_active`` in place, and a
+        # snapshot must not alias live state
+        return {"initialized": 1, "active": np.array(self._active, bool),
                 "joined": np.asarray(self._joined, np.int64),
                 "left": np.asarray(self._left, np.int64)}
 
@@ -125,7 +145,7 @@ class JoinLeave:
             self._active = None
             self._joined, self._left = (), ()
             return
-        self._active = np.asarray(d["active"], bool)
+        self._active = np.array(d["active"], bool)
         self._joined = tuple(int(u) for u in np.asarray(d["joined"]))
         self._left = tuple(int(u) for u in np.asarray(d["left"]))
 

@@ -190,6 +190,19 @@ class DynamicScenario:
                 j, l_ = sch.events()
                 joined, left = joined + tuple(j), left + tuple(l_)
 
+        # adversary channels (scenario/adversary.py): update corruptions
+        # for the executor, multiplicative per-UE compute-rate scaling
+        # for the cost model
+        corrupted = ()
+        for sch in self.schedules:
+            if hasattr(sch, "corrupted"):
+                corrupted = corrupted + tuple(sch.corrupted(t))
+        scale = None
+        for sch in self.schedules:
+            if hasattr(sch, "compute_scale"):
+                s = np.asarray(sch.compute_scale(t, N), float)
+                scale = s if scale is None else scale * s
+
         # 2.-4. radio plane
         if self.mobility is not None:
             self._layout.ue_pos = self.mobility.step(
@@ -231,9 +244,12 @@ class DynamicScenario:
             net, R_nb=R_nb, R_bn=R_bn, R_ss=R_ss, R_sb=R_sb,
             subnet_of_ue=subnet_of_ue, adjacency=adjacency)
         active = sum(1 for d in data if len(d["y"]))
-        events = ScenarioEvents(round=t, handovers=handovers,
-                                joined=joined, left=left,
-                                mesh_down=mesh_down, active_ues=active)
+        events = ScenarioEvents(
+            round=t, handovers=handovers, joined=joined, left=left,
+            mesh_down=mesh_down, active_ues=active,
+            corrupted=tuple(sorted(corrupted)),
+            compute_scale=() if scale is None
+            else tuple(float(x) for x in scale))
         return net_t, data, events
 
     # -------------------------------------------------------- internals --

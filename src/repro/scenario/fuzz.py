@@ -1,0 +1,319 @@
+"""Property-based scenario fuzzer: engine invariants on random draws.
+
+Every draw is a full :class:`~repro.experiments.spec.ExperimentSpec` —
+scenario (mobility x channel x drift x adversary, via the preset
+registry including the randomly composed ``fuzzmix:<seed>`` axis) x
+strategy x robust aggregation x engine hyper-parameters x run seed — and
+every draw must satisfy the engine's standing invariants:
+
+1. **determinism** — re-running the same spec+seed reproduces the whole
+   metric/plan trace bit-exactly;
+2. **conservation** — every datapoint a UE observed lands at exactly one
+   DPU after ``realize_offloading`` (checked every round);
+3. **no-retrace** — the replay run triggers ZERO process-wide backend
+   compiles (``repro.analysis.sanitize.no_retrace``): the warm run
+   already compiled everything a same-shape run needs;
+4. **finiteness** — params are finite after every round, and the round
+   loss is finite whenever any UE contributed data (``check_finite``);
+5. **resume** — killing the run at the midpoint, checkpointing through
+   ``repro.experiments.runstate``, and restoring into a FRESH engine
+   reproduces the remaining rounds bit-exactly.
+
+Failing draws serialize the exact ExperimentSpec JSON + seed to
+``--out`` so any failure is a one-command replay::
+
+    python -m repro.scenario.fuzz --n 25 --seed 0
+    python -m repro.scenario.fuzz --replay fuzz_out/failing_draw_3.json
+
+``--break-invariant determinism`` is the gate's selftest: it runs one
+draw whose replay deliberately mutates the seed and exits 0 only if the
+violation is caught and serialized.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+from typing import List, Optional
+
+import numpy as np
+
+from repro.analysis.sanitize import SanitizerError, check_finite, no_retrace
+from repro.experiments import presets as _presets  # noqa: F401 (registry)
+from repro.experiments.build import build_context
+from repro.experiments.spec import (ConstsSpec, DataSpec, EngineSpec,
+                                    ExperimentSpec, ModelSpec, NetworkSpec,
+                                    from_json, to_json)
+
+SCENARIO_POOL = (
+    "static", "campus_walk", "campus_walk:fast", "vehicular",
+    "flash_crowd", "label_shift", "label_shift:2", "churn",
+    "byzantine", "byzantine:0.34", "poisoned", "stragglers",
+    # the composed axis: mobility x channel x drift x adversary in one
+    # registry string, so failing compositions replay through the spec
+    "fuzzmix",
+)
+STRATEGY_POOL = ("cefl", "greedy_data", "greedy_rate", "fixed:0",
+                 "fednova", "fedavg")
+ROBUST_POOL = ("none", "none", "trimmed_mean", "median")   # none-weighted
+
+
+class InvariantViolation(AssertionError):
+    """One engine invariant failed on one draw."""
+
+    def __init__(self, invariant: str, detail: str):
+        super().__init__(f"[{invariant}] {detail}")
+        self.invariant = invariant
+        self.detail = detail
+
+
+# ---------------------------------------------------------- drawing -----
+
+def draw_spec(rng: np.random.RandomState, *, rounds: int = 3) \
+        -> ExperimentSpec:
+    """One random experiment cell, sized for fuzzing: fixed tiny
+    model/network dims (so compile caches amortize across draws) with
+    the scenario / strategy / robust-agg / seed axes randomized."""
+    scenario = SCENARIO_POOL[rng.randint(len(SCENARIO_POOL))]
+    if scenario == "fuzzmix":
+        scenario = f"fuzzmix:{rng.randint(0, 1000)}"
+    return ExperimentSpec(
+        name="fuzz_draw",
+        model=ModelSpec(input_shape=(8, 8, 1), hidden=(16,)),
+        data=DataSpec(pool=2000, mean_arrivals=120.0, std_arrivals=12.0,
+                      eval_examples=200),
+        network=NetworkSpec(num_ue=4, num_bs=2, num_dc=2),
+        consts=ConstsSpec(mode="fixed", L=5.0, theta=2.0, sigma=3.0),
+        engine=EngineSpec(
+            rounds=rounds,
+            eta=float(rng.choice([0.05, 0.1])),
+            solver_outer=2,
+            reoptimize_every=int(rng.choice([1, 2])),
+            eval_every=int(rng.choice([1, 2])),
+            robust_agg=ROBUST_POOL[rng.randint(len(ROBUST_POOL))],
+            trim_frac=float(rng.choice([0.1, 0.25]))),
+        strategy=STRATEGY_POOL[rng.randint(len(STRATEGY_POOL))],
+        scenario=scenario,
+        seeds=(int(rng.randint(0, 2 ** 16)),))
+
+
+# ------------------------------------------------------ the invariants --
+
+def _trace_of(reports) -> List[tuple]:
+    """The comparable bit-exact trace of a run."""
+    return [(r.round, r.loss, r.acc, r.aggregator, r.dc_points,
+             r.handovers, r.active_ues, r.energy, r.delay)
+            for r in reports]
+
+
+def _run_rounds(ctx, seed: int, *, stop_at: Optional[int] = None,
+                run=None):
+    """Drive (or continue) one engine run through the decomposed loop —
+    begin_round / execute_round / finish_round — checking conservation
+    and finiteness every round.  Returns the ``_FuzzRun``."""
+    if run is None:
+        engine = ctx.make_engine(seed)
+        ues = ctx.make_ues(seed)
+        state = engine.init_loop(ues, init_params=ctx.p0,
+                                 loss_fn=ctx.loss_fn, eval_fn=ctx.eval_fn)
+        run = _FuzzRun(seed=seed, engine=engine, ues=ues, state=state)
+    engine, state = run.engine, run.state
+    rounds = engine.opts.rounds if stop_at is None \
+        else min(stop_at, engine.opts.rounds)
+    while state.t < rounds and not state.stopped:
+        staged = engine.begin_round(state, run.ues)
+        got = sum(len(d["y"]) for d in staged.datasets if d is not None)
+        want = int(staged.D_bar.sum())
+        if got != want:
+            raise InvariantViolation(
+                "conservation",
+                f"round {staged.t}: {got} datapoints at DPUs vs "
+                f"{want} observed (realize_offloading leak)")
+        mean_loss, acc = engine.execute_round(state, staged)
+        engine.finish_round(state, staged, mean_loss, acc)
+        try:
+            check_finite(state.params, f"params after round {staged.t}")
+        except SanitizerError as e:
+            raise InvariantViolation("finiteness", str(e)) from None
+        if staged.events.active_ues > 0 and not np.isfinite(mean_loss):
+            raise InvariantViolation(
+                "finiteness",
+                f"round {staged.t}: non-finite loss {mean_loss} with "
+                f"{staged.events.active_ues} active UEs")
+    return run
+
+
+@dataclasses.dataclass
+class _FuzzRun:
+    """``runstate``-compatible run shim (same attrs as ``sweep._Run``)."""
+    seed: int
+    engine: object
+    ues: list
+    state: object
+
+
+def check_draw(spec: ExperimentSpec, *, mutate_seed: bool = False) -> None:
+    """Assert every engine invariant on one draw; raises
+    :class:`InvariantViolation`.  ``mutate_seed`` deliberately replays
+    under a different seed — the determinism invariant must then fail
+    (the ``--break-invariant`` selftest)."""
+    from repro.experiments import runstate
+
+    ctx = build_context(spec)
+    seed = spec.run_seeds[0]
+
+    # run A: the warm reference (also compiles everything this shape
+    # needs, so run B can demand zero recompiles)
+    ref = _run_rounds(ctx, seed)
+    ref_trace = _trace_of(ref.state.reports)
+
+    # run B: same seed bit-exact, with zero process-wide compiles
+    replay_seed = seed + 1 if mutate_seed else seed
+    try:
+        if mutate_seed:
+            # a different seed legitimately changes shapes/compiles;
+            # only the determinism comparison is under test here
+            rep = _run_rounds(ctx, replay_seed)
+        else:
+            with no_retrace(f"fuzz replay of {spec.scenario}"):
+                rep = _run_rounds(ctx, replay_seed)
+    except SanitizerError as e:
+        raise InvariantViolation("no-retrace", str(e)) from None
+    if _trace_of(rep.state.reports) != ref_trace:
+        raise InvariantViolation(
+            "determinism",
+            f"seed {replay_seed} replay trace diverged from seed {seed} "
+            f"reference (scenario={spec.scenario}, "
+            f"strategy={spec.strategy})")
+
+    # run C: kill at the midpoint, checkpoint, restore into a FRESH
+    # engine, finish — the suffix must match the reference trace
+    rounds = spec.engine.rounds
+    k = max(1, rounds // 2)
+    half = _run_rounds(ctx, seed, stop_at=k)
+    with tempfile.TemporaryDirectory() as tmp:
+        runstate.save_sweep_state(tmp, [half], spec_json=to_json(spec),
+                                  round_idx=k)
+        state_d, reports_d, _, _ = runstate.load_sweep_state(tmp)
+    engine2 = ctx.make_engine(seed)
+    ues2 = ctx.make_ues(seed)
+    state2 = engine2.init_loop(ues2, init_params=ctx.p0,
+                               loss_fn=ctx.loss_fn, eval_fn=ctx.eval_fn)
+    resumed = _FuzzRun(seed=seed, engine=engine2, ues=ues2, state=state2)
+    runstate.restore_run(resumed, state_d[str(seed)], reports_d[str(seed)],
+                         engine2)
+    _run_rounds(ctx, seed, run=resumed)
+    if _trace_of(resumed.state.reports) != ref_trace:
+        raise InvariantViolation(
+            "resume",
+            f"kill-and-resume at round {k} diverged from the straight "
+            f"run (scenario={spec.scenario}, strategy={spec.strategy})")
+
+
+# ----------------------------------------------------- fuzz campaign ----
+
+def _write_artifact(out_dir: str, index: int, spec: ExperimentSpec,
+                    err: InvariantViolation, fuzz_seed: int) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"failing_draw_{index}.json")
+    with open(path, "w") as fh:
+        json.dump({"spec": spec.to_dict(),
+                   "seed": spec.run_seeds[0],
+                   "invariant": err.invariant,
+                   "detail": err.detail,
+                   "draw_index": index,
+                   "fuzz_seed": fuzz_seed}, fh, indent=1)
+    return path
+
+
+def replay_command(path: str) -> str:
+    return f"PYTHONPATH=src python -m repro.scenario.fuzz --replay {path}"
+
+
+def run_fuzz(n: int, seed: int, out_dir: str, *, rounds: int = 3,
+             mutate_seed: bool = False, progress=print) -> List[str]:
+    """Run ``n`` draws; returns the artifact paths of failing draws."""
+    rng = np.random.RandomState(seed)
+    artifacts = []
+    for i in range(n):
+        spec = draw_spec(rng, rounds=rounds)
+        label = (f"draw {i}: scenario={spec.scenario} "
+                 f"strategy={spec.strategy} "
+                 f"robust={spec.engine.robust_agg} seed={spec.run_seeds[0]}")
+        try:
+            check_draw(spec, mutate_seed=mutate_seed)
+        except InvariantViolation as e:
+            path = _write_artifact(out_dir, i, spec, e, seed)
+            artifacts.append(path)
+            progress(f"[fuzz] FAIL {label}\n       {e}\n"
+                     f"       replay: {replay_command(path)}")
+        else:
+            progress(f"[fuzz] ok   {label}")
+    return artifacts
+
+
+def replay(path: str) -> None:
+    """Re-run one serialized failing draw (raises on violation)."""
+    with open(path) as fh:
+        artifact = json.load(fh)
+    spec = from_json(json.dumps(artifact["spec"]))
+    print(f"[fuzz] replaying {path}: invariant={artifact['invariant']} "
+          f"scenario={spec.scenario} strategy={spec.strategy} "
+          f"seed={artifact['seed']}")
+    check_draw(spec)
+    print("[fuzz] replay passed (the failure did not reproduce)")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.scenario.fuzz", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--n", type=int, default=10, help="number of draws")
+    p.add_argument("--seed", type=int, default=0, help="campaign seed")
+    p.add_argument("--rounds", type=int, default=3,
+                   help="engine rounds per draw")
+    p.add_argument("--out", default="fuzz_out",
+                   help="failing-draw artifact directory")
+    p.add_argument("--replay", dest="replay_path", default=None,
+                   help="re-run one serialized failing draw and exit")
+    p.add_argument("--break-invariant", choices=("determinism",),
+                   default=None,
+                   help="selftest: deliberately violate an invariant and "
+                        "verify the fuzzer catches + serializes it")
+    args = p.parse_args(argv)
+
+    if args.replay_path:
+        try:
+            replay(args.replay_path)
+        except InvariantViolation as e:
+            print(f"[fuzz] replay FAILED: {e}")
+            return 1
+        return 0
+
+    if args.break_invariant:
+        artifacts = run_fuzz(1, args.seed, args.out, rounds=args.rounds,
+                             mutate_seed=True)
+        if not artifacts:
+            print("[fuzz] selftest FAILED: the mutated-seed replay was "
+                  "NOT caught")
+            return 1
+        print(f"[fuzz] selftest ok: broken {args.break_invariant} caught "
+              f"and serialized to {artifacts[0]}")
+        return 0
+
+    artifacts = run_fuzz(args.n, args.seed, args.out, rounds=args.rounds)
+    if artifacts:
+        print(f"[fuzz] {len(artifacts)}/{args.n} draws FAILED; artifacts "
+              f"in {args.out}/")
+        for a in artifacts:
+            print(f"  {replay_command(a)}")
+        return 1
+    print(f"[fuzz] all {args.n} draws passed every engine invariant")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

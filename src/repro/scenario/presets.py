@@ -10,6 +10,10 @@ device availability dynamics.  docs/scenarios.md tabulates all of them.
 """
 from __future__ import annotations
 
+import numpy as np
+
+from repro.scenario.adversary import (ByzantineUpdate, Dropout, LabelPoison,
+                                      Straggler)
 from repro.scenario.base import register_scenario
 from repro.scenario.drift_schedules import (ArrivalBurst, JoinLeave,
                                             LabelRotation)
@@ -73,3 +77,88 @@ def churn(arg: str = "") -> DynamicScenario:
         schedules=(JoinLeave(p_leave=0.15, p_return=0.45, min_active=2),),
         area=1500.0, dt=60.0, handover_margin_db=3.0,
         mesh_outage_p=0.03, wired_jitter=0.1)
+
+
+# ------------------------------------------------- adversarial presets --
+
+@register_scenario("byzantine")
+def byzantine(arg: str = "") -> DynamicScenario:
+    """Sign-flip byzantine UEs on a static radio plane:
+    ``byzantine:<frac>`` compromises ``round(frac * N)`` evenly spaced
+    UEs (default 0.2; ``byzantine:0`` is the clean twin with identical
+    rng consumption, the acceptance-test baseline).  Pair with
+    ``EngineOptions(robust_agg="trimmed_mean")`` to defend."""
+    frac = float(arg) if arg else 0.2
+    return DynamicScenario(
+        mobility=None,
+        schedules=(ByzantineUpdate(mode="sign_flip", frac=frac,
+                                   scale=4.0),),
+        wired_jitter=0.1)
+
+
+@register_scenario("poisoned")
+def poisoned(arg: str = "") -> DynamicScenario:
+    """Label-flipping data poisoning (``poisoned:<frac>``, default 0.3)
+    on a static radio plane: compromised UEs train on y -> C-1-y."""
+    frac = float(arg) if arg else 0.3
+    return DynamicScenario(
+        mobility=None,
+        schedules=(LabelPoison(frac=frac),),
+        wired_jitter=0.1)
+
+
+@register_scenario("stragglers")
+def stragglers(arg: str = "") -> DynamicScenario:
+    """Straggler-dominated edge: 30% of UEs compute at
+    ``f_n / slowdown`` (``stragglers:<slowdown>``, default 4x) and every
+    UE hard-drops i.i.d. with p=0.1, over slow pedestrian drift."""
+    slowdown = float(arg) if arg else 4.0
+    return DynamicScenario(
+        mobility=RandomWaypoint(speed=(0.3, 1.0)),
+        schedules=(Straggler(frac=0.3, slowdown=slowdown),
+                   Dropout(p=0.1, min_active=1)),
+        area=1500.0, dt=60.0, handover_margin_db=3.0,
+        mesh_outage_p=0.02, wired_jitter=0.1)
+
+
+@register_scenario("fuzzmix")
+def fuzzmix(arg: str = "") -> DynamicScenario:
+    """A randomly composed scenario — mobility x channel x drift x
+    adversary — fully determined by the integer arg (``fuzzmix:<seed>``).
+    This is the fuzzer's composition axis: because the draw seed IS the
+    scenario spec string, any failing composition replays through a
+    plain ExperimentSpec."""
+    rng = np.random.RandomState(int(arg) if arg else 0)
+    mobility = [
+        None,
+        RandomWaypoint(speed=(0.5, 2.0)),
+        GaussMarkov(mean_speed=12.0, alpha=0.7, sigma=4.0),
+    ][rng.randint(3)]
+    pool = [
+        lambda: LabelRotation(period=int(rng.randint(2, 6)),
+                              shift=int(rng.randint(1, 12))),
+        lambda: ArrivalBurst(start=int(rng.randint(0, 3)),
+                             length=int(rng.randint(1, 4)),
+                             factor=float(rng.uniform(0.5, 3.0))),
+        lambda: JoinLeave(p_leave=float(rng.uniform(0.05, 0.25)),
+                          p_return=float(rng.uniform(0.3, 0.7)),
+                          min_active=2),
+        lambda: ByzantineUpdate(
+            mode=("sign_flip", "gauss")[rng.randint(2)],
+            frac=float(rng.uniform(0.1, 0.35)),
+            scale=float(rng.uniform(1.0, 6.0))),
+        lambda: LabelPoison(frac=float(rng.uniform(0.1, 0.4))),
+        lambda: Straggler(frac=float(rng.uniform(0.1, 0.5)),
+                          slowdown=float(rng.uniform(2.0, 8.0))),
+        lambda: Dropout(p=float(rng.uniform(0.05, 0.25)), min_active=1),
+    ]
+    picks = sorted(rng.choice(len(pool), size=rng.randint(1, 4),
+                              replace=False))
+    schedules = tuple(pool[i]() for i in picks)
+    return DynamicScenario(
+        mobility=mobility, schedules=schedules,
+        area=float(rng.uniform(1000.0, 2500.0)),
+        dt=float(rng.uniform(30.0, 120.0)),
+        handover_margin_db=float(rng.uniform(1.0, 3.0)),
+        mesh_outage_p=float(rng.uniform(0.0, 0.08)),
+        wired_jitter=float(rng.uniform(0.05, 0.2)))

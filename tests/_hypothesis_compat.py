@@ -3,16 +3,24 @@
 The container the tier-1 suite runs in has no network access and no
 ``hypothesis`` wheel baked in, which used to fail collection for five test
 modules.  The fallback here implements just the strategy surface those
-modules use (floats / integers / sampled_from / lists) and runs each
-``@given`` test on a handful of seeded pseudo-random draws — strictly
-weaker than hypothesis, but it keeps the properties exercised.
+modules use (floats / integers / booleans / sampled_from / lists / tuples
+/ one_of / composite) and runs each ``@given`` test on a handful of seeded
+pseudo-random draws — strictly weaker than hypothesis, but it keeps the
+properties exercised.  Set ``REPRO_FUZZ_EXAMPLES`` to scale the fallback
+draw count (default 5) — the nightly fuzz job turns it up.
 """
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
 except ModuleNotFoundError:
+    import os
+
     import numpy as np
 
     _FALLBACK_EXAMPLES = 5
+
+    def _n_examples() -> int:
+        return int(os.environ.get("REPRO_FUZZ_EXAMPLES",
+                                  _FALLBACK_EXAMPLES))
 
     class _Strategy:
         def __init__(self, draw):
@@ -30,16 +38,65 @@ except ModuleNotFoundError:
                 lambda rng: int(rng.randint(min_value, max_value + 1)))
 
         @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randint(2)))
+
+        @staticmethod
         def sampled_from(elements):
             seq = list(elements)
             return _Strategy(lambda rng: seq[rng.randint(len(seq))])
 
         @staticmethod
-        def lists(elem, min_size=0, max_size=10, **_):
+        def lists(elem, min_size=0, max_size=10, unique=False, **_):
             def draw(rng):
                 n = int(rng.randint(min_size, max_size + 1))
-                return [elem.draw(rng) for _ in range(n)]
+                if not unique:
+                    return [elem.draw(rng) for _ in range(n)]
+                out, seen = [], set()
+                # rejection-sample distinct values; give up gracefully
+                # once the element space looks exhausted
+                for _attempt in range(100 * max(n, 1)):
+                    if len(out) >= n:
+                        break
+                    v = elem.draw(rng)
+                    try:
+                        key = v
+                        hash(key)
+                    except TypeError:
+                        key = repr(v)
+                    if key not in seen:
+                        seen.add(key)
+                        out.append(v)
+                if len(out) < min_size:
+                    raise ValueError(
+                        f"could not draw {min_size} unique elements")
+                return out
             return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies))
+
+        @staticmethod
+        def one_of(*strategies):
+            # hypothesis accepts both one_of(a, b) and one_of([a, b])
+            if len(strategies) == 1 and not isinstance(strategies[0],
+                                                       _Strategy):
+                strategies = tuple(strategies[0])
+            seq = list(strategies)
+            return _Strategy(lambda rng: seq[rng.randint(len(seq))].draw(rng))
+
+        @staticmethod
+        def composite(fn):
+            """``@st.composite`` over the fallback: the wrapped function
+            receives a ``draw`` callable resolving sub-strategies against
+            the case rng."""
+            def build(*args, **kwargs):
+                def draw_value(rng):
+                    return fn(lambda s: s.draw(rng), *args, **kwargs)
+                return _Strategy(draw_value)
+            return build
 
     def settings(*_a, **_k):
         def deco(fn):
@@ -51,7 +108,7 @@ except ModuleNotFoundError:
             # no functools.wraps: pytest must NOT see fn's parameters
             # (it would treat the strategy-filled ones as fixtures)
             def wrapper():
-                for case in range(_FALLBACK_EXAMPLES):
+                for case in range(_n_examples()):
                     rng = np.random.RandomState(20260728 + case)
                     vals = [s.draw(rng) for s in garg]
                     kv = {k: s.draw(rng) for k, s in gkw.items()}

@@ -18,6 +18,8 @@ from repro.scenario import (ArrivalBurst, DynamicScenario, GaussMarkov,
                             layout_from_network)
 from repro.solver import ObjectiveWeights
 
+from _hypothesis_compat import given, settings, st
+
 NET = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2))
 (TRX, TRY), (TEX, TEY) = make_image_dataset(2500, (8, 8, 1))
 CCFG = ClassifierConfig(input_shape=(8, 8, 1), hidden=(16,))
@@ -212,15 +214,19 @@ def test_join_leave_min_active_and_events():
 
 # ----------------------------------------------- engine + determinism --
 
+def _eval_fn(p):
+    # module-level (stable identity): the fused-round cache keys on the
+    # eval_fn object, so a per-call lambda would defeat replay no-retrace
+    return classifier_accuracy(p, np.asarray(TEX[:200]), np.asarray(TEY[:200]))
+
+
 def _run_engine(strategy, scenario, seed=0, rounds=5, arrivals=120):
     ues = _ues(seed, arrivals=arrivals)
     eng = Engine(NET, strategy, consts=CONSTS, ow=OW, scenario=scenario,
                  opts=EngineOptions(rounds=rounds, eta=0.1, solver_outer=2,
                                     seed=seed))
-    return eng.run(
-        ues, init_params=P0, loss_fn=classifier_loss,
-        eval_fn=lambda p: classifier_accuracy(
-            p, np.asarray(TEX[:200]), np.asarray(TEY[:200])))
+    return eng.run(ues, init_params=P0, loss_fn=classifier_loss,
+                   eval_fn=_eval_fn)
 
 
 def test_engine_records_dynamics_in_reports():
@@ -233,11 +239,23 @@ def test_engine_records_dynamics_in_reports():
     assert all(r.active_ues >= 1 for r in res.reports)
 
 
-def test_engine_seed_determinism_under_dynamic_scenario():
+# the cheap presets gate tier-1; the rest ride the full-suite job
+_E2E_FAST = ("campus_walk", "byzantine", "poisoned", "stragglers",
+             "fuzzmix:1")
+_E2E_SLOW = ("static", "vehicular", "flash_crowd", "label_shift", "churn",
+             "byzantine:0.34", "fuzzmix:15")
+
+
+@pytest.mark.parametrize(
+    "preset",
+    list(_E2E_FAST) + [pytest.param(p, marks=pytest.mark.slow)
+                       for p in _E2E_SLOW])
+def test_engine_seed_determinism_under_dynamic_scenario(preset):
     """Same seed => identical loss series, plans, and association traces;
-    the run is a pure function of (seed, scenario, strategy)."""
-    a = _run_engine("greedy_data", "campus_walk", seed=0, rounds=5)
-    b = _run_engine("greedy_data", "campus_walk", seed=0, rounds=5)
+    the run is a pure function of (seed, scenario, strategy) — for EVERY
+    registered preset, the adversarial ones included."""
+    a = _run_engine("greedy_data", preset, seed=0, rounds=4)
+    b = _run_engine("greedy_data", preset, seed=0, rounds=4)
     assert a.series("loss") == b.series("loss")
     assert a.series("acc") == b.series("acc")
     assert a.series("aggregator") == b.series("aggregator")
@@ -247,8 +265,15 @@ def test_engine_seed_determinism_under_dynamic_scenario():
         for k, va in ra.plan.to_w().items():
             np.testing.assert_array_equal(np.asarray(va),
                                           np.asarray(rb.plan.to_w()[k]))
-    c = _run_engine("greedy_data", "campus_walk", seed=1, rounds=5)
-    assert a.series("loss") != c.series("loss")     # seed actually matters
+    if preset == "campus_walk":
+        c = _run_engine("greedy_data", preset, seed=1, rounds=4)
+        assert a.series("loss") != c.series("loss")  # seed actually matters
+
+
+def test_e2e_determinism_covers_every_registered_preset():
+    """The parametrization above must not silently miss a new preset."""
+    covered = {p.split(":")[0] for p in _E2E_FAST + _E2E_SLOW}
+    assert covered == set(available_scenarios())
 
 
 def test_churn_scenario_runs_with_empty_ues():
@@ -286,3 +311,118 @@ def test_flash_crowd_bursts_arrivals():
              for _, data, _ in _steps(scen, 8)]
     pre, burst = np.mean(sizes[:5]), np.mean(sizes[5:])
     assert burst > 1.8 * pre
+
+
+# --------------------------------------- drift-schedule edge cases ------
+
+def test_join_leave_all_ues_offline_round_stays_finite(assert_no_retrace):
+    """min_active=0 + p_leave=1: every UE drops at round 0.  The engine
+    must skip aggregation (params unchanged, finite) without NaN in
+    params/costs and without a retrace on replay."""
+    def scen():
+        return DynamicScenario(
+            mobility=None,
+            schedules=(JoinLeave(p_leave=1.0, p_return=0.6,
+                                 min_active=0),))
+    res = _run_engine("greedy_data", scen(), rounds=4, arrivals=80)
+    assert any(r.active_ues == 0 for r in res.reports)
+    for leaf in jax.tree_util.tree_leaves(res.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert np.isfinite(res.series("energy")).all()
+    with assert_no_retrace():
+        _run_engine("greedy_data", scen(), rounds=4, arrivals=80)
+
+
+def test_arrival_burst_zero_arrival_window():
+    sch = ArrivalBurst(start=1, length=2, factor=0.0)
+    data = {"x": np.arange(10)[:, None], "y": np.arange(10)}
+    rng = np.random.RandomState(0)
+    assert len(sch.apply(0, 0, data, rng)["y"]) == 10    # outside window
+    out = sch.apply(1, 0, data, rng)
+    assert len(out["y"]) == 0 and len(out["x"]) == 0
+    assert out["x"].shape[1:] == data["x"].shape[1:]
+    # a lull (0 < factor < 1) still never silences a UE entirely
+    assert len(ArrivalBurst(start=0, length=1, factor=0.01).apply(
+        0, 0, data, rng)["y"]) == 1
+
+
+def test_arrival_burst_zero_window_engine_round_stays_finite():
+    scen = DynamicScenario(
+        mobility=None,
+        schedules=(ArrivalBurst(start=1, length=1, factor=0.0),))
+    res = _run_engine("greedy_data", scen, rounds=3, arrivals=80)
+    assert res.reports[1].active_ues == 0
+    for leaf in jax.tree_util.tree_leaves(res.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_label_rotation_shift_beyond_num_classes():
+    data = {"x": np.zeros((4, 1)), "y": np.array([0, 1, 8, 9])}
+    rng = np.random.RandomState(0)
+    # shift == num_classes is the identity at every round
+    sch = LabelRotation(period=1, shift=10, num_classes=10)
+    for t in range(4):
+        np.testing.assert_array_equal(sch.apply(t, 0, data, rng)["y"],
+                                      data["y"])
+    # shift > num_classes wraps mod C and labels stay in range
+    sch = LabelRotation(period=1, shift=13, num_classes=10)
+    out = sch.apply(1, 0, data, rng)["y"]
+    np.testing.assert_array_equal(out, (data["y"] + 3) % 10)
+    for t in range(8):
+        y = sch.apply(t, 0, data, rng)["y"]
+        assert ((0 <= y) & (y < 10)).all()
+
+
+def _schedule_instances():
+    from repro.scenario import (ByzantineUpdate, Dropout, LabelPoison,
+                                Straggler)
+    return [LabelRotation(period=2, shift=3),
+            ArrivalBurst(start=1, length=2, factor=2.0),
+            JoinLeave(p_leave=0.4, p_return=0.4, min_active=1),
+            ByzantineUpdate(mode="gauss", frac=0.4, scale=2.0),
+            LabelPoison(frac=0.5),
+            Straggler(frac=0.5, slowdown=3.0),
+            Dropout(p=0.4, min_active=1)]
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_every_schedule_class_state_dict_round_trips(seed):
+    """Property: for every schedule class, advancing K rounds, snapshotting
+    ``state_dict`` into a fresh instance, and continuing produces the same
+    data/events trace as the uninterrupted run."""
+    n_ue, k, total = 5, 3, 6
+    data = {"x": np.arange(12)[:, None].astype(float), "y": np.arange(12)}
+
+    def trace(sch, rng, t0, t1):
+        out = []
+        for t in range(t0, t1):
+            if hasattr(sch, "begin_round"):
+                sch.begin_round(t, n_ue, rng)
+            ev = sch.events() if hasattr(sch, "events") else ()
+            rows = [sch.apply(t, ue, data, rng)["y"].tolist()
+                    for ue in range(n_ue)]
+            extra = (tuple(sch.corrupted(t))
+                     if hasattr(sch, "corrupted") else (),
+                     tuple(sch.compute_scale(t, n_ue))
+                     if hasattr(sch, "compute_scale") else ())
+            out.append((ev, rows, extra))
+        return out
+
+    for a, b in zip(_schedule_instances(), _schedule_instances()):
+        assert hasattr(a, "state_dict"), type(a).__name__
+        if hasattr(a, "reset"):
+            a.reset(n_ue)
+        rng = np.random.RandomState(seed)
+        head = trace(a, rng, 0, k)
+        snap = a.state_dict()
+        rng_state = rng.get_state()
+        tail_a = trace(a, rng, k, total)
+        if hasattr(b, "reset"):
+            b.reset(n_ue)
+        b.load_state_dict(snap)
+        rng2 = np.random.RandomState(seed)
+        rng2.set_state(rng_state)
+        tail_b = trace(b, rng2, k, total)
+        assert tail_a == tail_b, type(a).__name__
+        del head
