@@ -49,6 +49,14 @@ KERNEL_METRICS = ("sim_round_speedup", "mesh_round_speedup",
 # everything else is a speedup gated as fresh >= baseline / tol
 LOWER_IS_BETTER = frozenset({"fedprox_vs_xla_ratio"})
 
+# lower-is-better metric families: the solver scaling curve gates warm
+# wall-clock (ms) and growth ratios, where smaller is faster
+LOWER_IS_BETTER_PREFIXES = ("solver_curve_", "solver_cohort_")
+
+
+def lower_is_better(k: str) -> bool:
+    return k in LOWER_IS_BETTER or k.startswith(LOWER_IS_BETTER_PREFIXES)
+
 
 def _load(path):
     with open(path) as f:
@@ -85,6 +93,38 @@ def solver_ratios(fresh: dict) -> dict:
     return out
 
 
+def scaling_backend(fresh: dict):
+    sec = fresh.get("scaling_curve", fresh)
+    return sec.get("backend") or fresh.get("backend")
+
+
+def solver_scaling_ratios(fresh: dict) -> dict:
+    """Gated metrics from a ``fig7_solver --scaling-curve`` JSON
+    (``scaling_curve`` section): per-N warm wall-clock in ms (absolute,
+    gated under the generous tol like ``sweep_rounds_per_sec`` — catches
+    order-of-magnitude rot such as per-round retraces), the 2e4/2e3
+    growth ratio (machine-portable: how super-linear the solver is), and
+    the cohort-vs-small-N ratio (machine-portable: client sampling must
+    keep the 10^5-population solve at the small-N figure).  All
+    lower-is-better."""
+    sec = fresh.get("scaling_curve", fresh)
+    rows = {r["n_ue"]: r for r in sec["results"]}
+    out = {}
+    for n, r in sorted(rows.items()):
+        out[f"solver_curve_n{n}_warm_ms"] = round(
+            float(r["jit_warm_s"]) * 1e3, 2)
+    if 2000 in rows and 20000 in rows:
+        out["solver_curve_growth_2e4_over_2e3"] = round(
+            float(rows[20000]["jit_warm_s"])
+            / float(rows[2000]["jit_warm_s"]), 3)
+    coh = sec.get("cohort")
+    if coh and coh.get("cohort") in rows:
+        out["solver_cohort_vs_small_ratio"] = round(
+            float(coh["jit_warm_s"])
+            / float(rows[coh["cohort"]]["jit_warm_s"]), 3)
+    return out
+
+
 # sweep gate: the vmap-vs-sequential ratio is machine-portable; the
 # rounds/sec throughput is absolute but gated under the same generous
 # tol to catch order-of-magnitude rot (a silently-sequential "vmap"
@@ -104,7 +144,7 @@ def compare(baseline: dict, fresh: dict, tol: float):
     rows, regressions = [], []
     for k, base in sorted(baseline.items()):
         got = fresh.get(k)
-        if k in LOWER_IS_BETTER:
+        if lower_is_better(k):
             bound = base * tol
             ok = got is not None and got <= bound
         else:
@@ -129,12 +169,13 @@ def _select_baseline(baseline, backend):
     return baseline
 
 
-def _gate(name, committed_path, fresh_path, extract, tol, backend_of=None):
+def _gate(name, committed_path, fresh_path, extract, tol, backend_of=None,
+          baseline_key="smoke_baseline", summary=None):
     committed = _load(committed_path)
-    baseline = committed.get("smoke_baseline")
+    baseline = committed.get(baseline_key)
     if not baseline:
         raise SystemExit(
-            f"{committed_path} has no 'smoke_baseline' section — "
+            f"{committed_path} has no {baseline_key!r} section — "
             f"regenerate it with --update")
     fresh_json = _load(fresh_path)
     backend = backend_of(fresh_json) if backend_of else None
@@ -149,29 +190,58 @@ def _gate(name, committed_path, fresh_path, extract, tol, backend_of=None):
     print(f"== {name} (tol {tol:g}x{tag}) ==")
     for k, base, got, bound, ok in rows:
         got_s = "MISSING" if got is None else f"{got:8.2f}"
-        rel = "ceil " if k in LOWER_IS_BETTER else "floor"
+        rel = "ceil " if lower_is_better(k) else "floor"
         print(f"  {'ok ' if ok else 'REG'} {k:34s} baseline {base:8.2f}  "
               f"fresh {got_s}  {rel} {bound:8.2f}")
+    if summary is not None:
+        summary.extend((name, backend, k, base, got, bound, ok)
+                       for k, base, got, bound, ok in rows)
     return regressions
 
 
-def _update(committed_path, fresh_path, extract, backend_of=None):
+def _update(committed_path, fresh_path, extract, backend_of=None,
+            baseline_key="smoke_baseline"):
     committed = _load(committed_path)
     fresh_json = _load(fresh_path)
     ratios = extract(fresh_json)
     backend = backend_of(fresh_json) if backend_of else None
     if backend:
         # per-backend baseline: merge this backend's section, keep others
-        base = committed.get("smoke_baseline")
+        base = committed.get(baseline_key)
         base = dict(base) if _is_per_backend(base) else {}
         base[backend] = ratios
-        committed["smoke_baseline"] = base
+        committed[baseline_key] = base
     else:
-        committed["smoke_baseline"] = ratios
+        committed[baseline_key] = ratios
     with open(committed_path, "w") as f:
         json.dump(committed, f, indent=2)
         f.write("\n")
-    print(f"[check_regression] wrote smoke_baseline -> {committed_path}")
+    print(f"[check_regression] wrote {baseline_key} -> {committed_path}")
+
+
+def write_step_summary(summary, tol, path) -> None:
+    """Append the bench delta table to a GitHub Actions step summary
+    (markdown).  ``summary``: (gate, backend, metric, baseline, fresh,
+    bound, ok) rows from the _gate calls."""
+    lines = [
+        "### Bench regression gate",
+        "",
+        f"tolerance: {tol:g}x — speedups must stay above `baseline/tol`, "
+        "lower-is-better metrics below `baseline*tol`",
+        "",
+        "| gate | metric | baseline | fresh | delta | bound | ok |",
+        "|---|---|---:|---:|---:|---:|:---:|",
+    ]
+    for gate, backend, k, base, got, bound, ok in summary:
+        gate_s = f"{gate} ({backend})" if backend else gate
+        got_s = "missing" if got is None else f"{got:.2f}"
+        delta = "—" if got is None or not base else \
+            f"{(got / base - 1.0) * 100:+.1f}%"
+        rel = "≤" if lower_is_better(k) else "≥"
+        lines.append(f"| {gate_s} | `{k}` | {base:.2f} | {got_s} | {delta} "
+                     f"| {rel} {bound:.2f} | {'✅' if ok else '❌'} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main(argv=None):
@@ -179,35 +249,50 @@ def main(argv=None):
     ap.add_argument("--kernels", help="fresh microbench --smoke JSON")
     ap.add_argument("--solver", help="fresh fig7_solver --smoke JSON")
     ap.add_argument("--sweep", help="fresh sweep_bench --smoke JSON")
+    ap.add_argument("--solver-scaling",
+                    help="fresh fig7_solver --scaling-curve JSON (gated "
+                         "against BENCH_solver.json's scaling_baseline)")
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("BENCH_TOL", "3.0")))
     ap.add_argument("--update", action="store_true",
                     help="write the fresh ratios into the committed "
                          "baselines instead of gating")
     args = ap.parse_args(argv)
-    if not args.kernels and not args.solver and not args.sweep:
-        ap.error("need --kernels, --solver, and/or --sweep")
+    if not (args.kernels or args.solver or args.sweep
+            or args.solver_scaling):
+        ap.error("need --kernels, --solver, --sweep, and/or "
+                 "--solver-scaling")
 
+    solver_json = os.path.join(_ROOT, "BENCH_solver.json")
     pairs = []
     if args.kernels:
         pairs.append(("kernels", os.path.join(_ROOT, "BENCH_kernels.json"),
-                      args.kernels, kernel_ratios, kernel_backend))
+                      args.kernels, kernel_ratios, kernel_backend,
+                      "smoke_baseline"))
     if args.solver:
-        pairs.append(("solver", os.path.join(_ROOT, "BENCH_solver.json"),
-                      args.solver, solver_ratios, None))
+        pairs.append(("solver", solver_json, args.solver, solver_ratios,
+                      None, "smoke_baseline"))
+    if args.solver_scaling:
+        pairs.append(("solver-scaling", solver_json, args.solver_scaling,
+                      solver_scaling_ratios, scaling_backend,
+                      "scaling_baseline"))
     if args.sweep:
         pairs.append(("sweep", os.path.join(_ROOT, "BENCH_sweep.json"),
-                      args.sweep, sweep_ratios, None))
+                      args.sweep, sweep_ratios, None, "smoke_baseline"))
 
     if args.update:
-        for _, committed, fresh, extract, backend_of in pairs:
-            _update(committed, fresh, extract, backend_of)
+        for _, committed, fresh, extract, backend_of, key in pairs:
+            _update(committed, fresh, extract, backend_of,
+                    baseline_key=key)
         return 0
 
-    regressions = []
-    for name, committed, fresh, extract, backend_of in pairs:
+    regressions, summary = [], []
+    for name, committed, fresh, extract, backend_of, key in pairs:
         regressions += _gate(name, committed, fresh, extract, args.tol,
-                             backend_of)
+                             backend_of, baseline_key=key, summary=summary)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary and summary:
+        write_step_summary(summary, args.tol, step_summary)
     if regressions:
         print(f"BENCH REGRESSION: {regressions}", file=sys.stderr)
         return 1

@@ -81,6 +81,116 @@ def solver_scaling(ns=(20, 100, 500, 2000), *, n_bs=8, n_dc=4,
     return rows
 
 
+def _curve_case(n_ue, n_bs, n_dc):
+    """Like :func:`_scaling_case` but consensus-free: the centralized
+    solver never reads the (V, V) consensus graph, and skipping it (plus
+    the vectorized channel draws) is what makes 10^5-UE topologies
+    constructible in milliseconds."""
+    net = make_network(NetworkConfig(num_ue=n_ue, num_bs=n_bs,
+                                     num_dc=n_dc, seed=0), consensus=False)
+    nd = n_ue + n_dc
+    consts = MLConstants(L=4.0, theta_i=np.full(nd, 2.0),
+                         sigma_i=np.ones(nd), zeta1=2.0, zeta2=1.0)
+    rng = np.random.RandomState(n_ue)
+    D_bar = rng.normal(2000.0, 200.0, n_ue).clip(100)
+    return net, consts, D_bar
+
+
+def solver_scaling_curve(ns=(2000, 20000, 100000), *, n_bs=8, n_dc=4,
+                         outer=2, repeats=3, cohort=2000):
+    """The large-N scaling curve of the segment-sum solver (centralized
+    Algorithm 1): warm re-solve wall-clock at N in ``ns``, plus one
+    COHORT row — population ``ns[-1]``, per-round client sample of
+    ``cohort`` UEs, solved through ``topology.subnetwork`` — which is the
+    configuration the engine actually runs at 10^5-10^6 UEs
+    (``EngineOptions.cohort_size``).  The cohort row reuses the
+    (cohort, n_bs, n_dc) jit cache of the matching curve row, so its
+    warm time sits at the small-N figure no matter the population."""
+    from repro.network.topology import subnetwork
+    ow = ObjectiveWeights()
+    kw = dict(distributed=False, max_outer=outer, pd=PDHyper())
+    rows = []
+    for n in ns:
+        net, consts, D_bar = _curve_case(n, n_bs, n_dc)
+        t0 = time.perf_counter()
+        sca.solve(net, D_bar, consts, ow, backend="jit", **kw)
+        cold = time.perf_counter() - t0
+        rng = np.random.RandomState(1)
+        warm = []
+        for _ in range(repeats):
+            net_t = net.resample_rates(rng, 0.15)
+            D_t = D_bar * rng.uniform(0.9, 1.1, D_bar.shape)
+            t0 = time.perf_counter()
+            sca.solve(net_t, D_t, consts, ow, backend="jit", **kw)
+            warm.append(time.perf_counter() - t0)
+        row = {"n_ue": n, "n_bs": n_bs, "n_dc": n_dc,
+               "jit_warm_s": round(min(warm), 4),
+               "jit_cold_s": round(cold, 3)}
+        rows.append(row)
+        csv_line(f"solver_curve_n{n}", min(warm) * 1e6,
+                 f"cold={cold:.2f}s")
+    # --- cohort row: gather + warm-solve of the K-UE subproblem ---
+    pop = ns[-1]
+    net, consts, D_bar = _curve_case(pop, n_bs, n_dc)
+    rng = np.random.RandomState(2)
+    warm = []
+    for _ in range(repeats):
+        net_t = net.resample_rates(rng, 0.15)
+        D_t = D_bar * rng.uniform(0.9, 1.1, D_bar.shape)
+        t0 = time.perf_counter()
+        idx = np.sort(rng.choice(pop, cohort, replace=False))
+        sub = subnetwork(net_t, idx)
+        sub_consts = MLConstants(
+            L=consts.L,
+            theta_i=np.concatenate([consts.theta_i[:pop][idx],
+                                    consts.theta_i[pop:]]),
+            sigma_i=np.concatenate([consts.sigma_i[:pop][idx],
+                                    consts.sigma_i[pop:]]),
+            zeta1=consts.zeta1, zeta2=consts.zeta2)
+        sca.solve(sub, D_t[idx], sub_consts, ow, backend="jit", **kw)
+        warm.append(time.perf_counter() - t0)
+    cohort_row = {"n_ue": pop, "cohort": cohort, "n_bs": n_bs,
+                  "n_dc": n_dc, "jit_warm_s": round(min(warm), 4),
+                  "includes": "cohort draw + subnetwork gather + solve"}
+    csv_line(f"solver_cohort_n{pop}_k{cohort}", min(warm) * 1e6,
+             "draw+gather+solve")
+    return rows, cohort_row
+
+
+def run_scaling_curve(*, out_path=None, ns=(2000, 20000, 100000),
+                      cohort=2000):
+    """Run the curve and record it as the ``scaling_curve`` section of
+    BENCH_solver.json (committed) and/or ``out_path`` (the CI-fresh copy
+    consumed by ``check_regression.py --solver-scaling``).  Every other
+    section of an existing json (results, smoke_baseline,
+    scaling_baseline) is preserved."""
+    rows, cohort_row = solver_scaling_curve(ns=ns, cohort=cohort)
+    section = {
+        "mode": "centralized segment-sum solver, consensus-free topology, "
+                "max_outer=2, PDHyper defaults; jit_warm_s = best of 3 "
+                "warm re-solves (resampled rates/arrivals)",
+        "backend": __import__("jax").default_backend(),
+        "results": rows,
+        "cohort": cohort_row,
+    }
+    path = os.path.join(_ROOT, "BENCH_solver.json")
+    targets = [path] + ([out_path] if out_path else [])
+    for p in targets:
+        try:
+            with open(p) as f:
+                out = json.load(f)
+        except (OSError, ValueError):
+            out = {"bench": "solver_scaling"}
+        out["scaling_curve"] = section
+        os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+        with open(p, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"[fig7_solver] wrote {p}")
+    print(json.dumps(section, indent=2))
+    return rows, cohort_row
+
+
 def run_scaling(*, smoke=False, out_path=None):
     if smoke:
         rows = solver_scaling(ns=(8, 20), n_bs=4, n_dc=2, max_ref_n=20,
@@ -186,7 +296,9 @@ if __name__ == "__main__":
     from benchmarks.microbench import _flag_value
     _argv = sys.argv[1:]
     _out = _flag_value(_argv, "--out")
-    if "--smoke" in _argv:
+    if "--scaling-curve" in _argv:
+        run_scaling_curve(out_path=_out)
+    elif "--smoke" in _argv:
         run_scaling(smoke=True, out_path=_out)
     else:
         main(out_path=_out)

@@ -80,6 +80,20 @@ class EngineOptions:
     trim_frac: float = 0.1          # trim fraction per side for
                                     # robust_agg="trimmed_mean" (k =
                                     # min(floor(n*frac), (n-1)//2))
+    mesh_shape: Optional[Tuple[int, int]] = None
+                                    # (dpu, rows) device-mesh split for the
+                                    # sharded parameter plane
+                                    # (repro.sharding.plane): data-parallel
+                                    # over the DPU stack x FSDP rows.  None
+                                    # -> single-device execution.  Needs
+                                    # prod(mesh_shape) <= jax.device_count()
+    cohort_size: Optional[int] = None
+                                    # per-round client sampling: K UEs drawn
+                                    # uniformly without replacement each
+                                    # round; the others sit out (no data, no
+                                    # solver rows, no cost).  None/K >= N ->
+                                    # full participation.  The scale knob
+                                    # for 10^4-10^6-UE populations
 
 
 @dataclasses.dataclass(frozen=True)

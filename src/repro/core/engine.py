@@ -232,11 +232,19 @@ class SimExecutor:
     aggregation, and on eval-cadence rounds the engine passes ``eval_fn``
     so the eval forward pass fuses into the SAME program (no separate
     vmapped eval dispatch, no tree materialization).
+
+    With ``mesh_shape`` set, the fused round runs shard_map'd over the
+    ``('dpu', 'rows')`` device mesh (``repro.sharding.plane``): the DPU
+    stack data-parallel over 'dpu', plane rows FSDP-sharded over 'rows'
+    — bitwise identical to the single-device fused round.  Rounds that
+    cannot fuse (heterogeneous groups, fedavg, corruption, robust agg)
+    fall back to the single-device paths.
     """
     batch_homogeneous: bool = True
     use_plane: bool = True
     fuse_round: bool = True
     kernel_backend: str = "auto"    # ops.resolve_backend name
+    mesh_shape: Optional[tuple] = None   # (dpu, rows) device split
 
     @property
     def fused_eval(self) -> bool:
@@ -285,11 +293,24 @@ class SimExecutor:
                                              and theta is not None) \
                     else float(gamma)
                 Ds = [len(live[j][1]["y"]) for j in idxs]
-                new_params, losses, acc = fedprox.local_round_plane(
-                    params, loss_fn, [live[j][1] for j in idxs],
-                    gamma=gamma, m_frac=m, eta=eta, mu=mu,
-                    keys=[keys[j] for j in idxs], theta=theta_val,
-                    kernel_backend=self.kernel_backend, eval_fn=eval_fn)
+                if self.mesh_shape is not None:
+                    # deferred import: sharding is opt-in, the engine's
+                    # import surface stays mesh-free
+                    from repro.sharding import plane as shard_plane
+                    new_params, losses, acc = \
+                        shard_plane.local_round_plane_sharded(
+                            params, loss_fn, [live[j][1] for j in idxs],
+                            gamma=gamma, m_frac=m, eta=eta, mu=mu,
+                            keys=[keys[j] for j in idxs], theta=theta_val,
+                            mesh=shard_plane.plane_mesh(self.mesh_shape),
+                            kernel_backend=self.kernel_backend,
+                            eval_fn=eval_fn)
+                else:
+                    new_params, losses, acc = fedprox.local_round_plane(
+                        params, loss_fn, [live[j][1] for j in idxs],
+                        gamma=gamma, m_frac=m, eta=eta, mu=mu,
+                        keys=[keys[j] for j in idxs], theta=theta_val,
+                        kernel_backend=self.kernel_backend, eval_fn=eval_fn)
                 mean_loss = weighted_mean(list(losses), Ds)
                 if eval_fn is not None:
                     return new_params, mean_loss, acc
@@ -349,6 +370,10 @@ class MeshExecutor:
     agg_schedule: str = "all_reduce"
     use_plane: bool = True
     kernel_backend: str = "auto"    # ops.resolve_backend name
+    mesh_shape: Optional[tuple] = None   # (dpu, rows): device_put the
+                                         # plane stack with a NamedSharding
+                                         # over the plane mesh; GSPMD then
+                                         # partitions the jitted step
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def build_step(self, micro_loss_fn, hyper: CEFLHyper, *, jit=True):
@@ -420,7 +445,19 @@ class MeshExecutor:
         step = self._get_step(loss_fn, n, bucket, gamma_max, mu, eta)
         if self.use_plane:
             plane = as_plane(params)
-            new_stack, metrics = step(plane.broadcast(n), batch, meta)
+            stack = plane.broadcast(n)
+            if self.mesh_shape is not None:
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+                from repro.sharding import plane as shard_plane
+                from repro.sharding.specs import sanitize_spec
+                mesh = shard_plane.plane_mesh(self.mesh_shape)
+                spec = sanitize_spec(
+                    P(shard_plane.DPU_AXIS, shard_plane.ROW_AXIS, None),
+                    stack.data.shape, mesh)
+                stack = stack.with_data(jax.device_put(
+                    stack.data, NamedSharding(mesh, spec)))
+            new_stack, metrics = step(stack, batch, meta)
             # theta=1 inside the step; rescale outside the jit so per-round
             # tau_eff never triggers recompilation (plane arithmetic only)
             new_params = plane.with_data(
@@ -434,6 +471,64 @@ class MeshExecutor:
         new_params = jax.tree_util.tree_map(
             lambda p, p1: p + theta_val * (p1[0] - p), params, new_stack)
         return new_params, float(metrics["loss"])
+
+
+# ---------------------------------------------------- cohort sampling -----
+
+def _gather_plan(plan: RoundPlan, cohort: np.ndarray, n_ue: int) -> RoundPlan:
+    """Restrict a full-population plan to the cohort rows (the warm-start
+    view handed to the solver, and the costing view of off-cadence
+    rounds)."""
+    g = np.asarray(plan.gamma)
+    m = np.asarray(plan.m)
+    return RoundPlan(
+        rho_nb=jnp.asarray(np.asarray(plan.rho_nb)[cohort]),
+        rho_bs=plan.rho_bs,
+        f_n=jnp.asarray(np.asarray(plan.f_n)[cohort]),
+        z_s=plan.z_s,
+        gamma=jnp.asarray(np.concatenate([g[:n_ue][cohort], g[n_ue:]])),
+        m=jnp.asarray(np.concatenate([m[:n_ue][cohort], m[n_ue:]])),
+        I_s=plan.I_s,
+        I_nb=jnp.asarray(np.asarray(plan.I_nb)[cohort]),
+        I_bn=jnp.asarray(np.asarray(plan.I_bn)[:, cohort]),
+        R_bs=plan.R_bs, delta_A=plan.delta_A, delta_R=plan.delta_R)
+
+
+def _scatter_plan(sub: RoundPlan, cohort: np.ndarray, net,
+                  opts: EngineOptions) -> RoundPlan:
+    """Embed a cohort plan back into a full-population RoundPlan.
+
+    Non-cohort UEs sit the round out: zero offloading (they hold no round
+    data anyway), idle CPU frequency ``f_min``, the default (gamma, m)
+    settings, and rate-argmax one-hot associations — every field still
+    satisfies :meth:`RoundPlan.validate` at the full dims.
+    """
+    N, B, S = net.dims
+    K = int(cohort.shape[0])
+    rho_nb = np.zeros((N, B), np.float32)
+    rho_nb[cohort] = np.asarray(sub.rho_nb)
+    f_n = np.full(N, net.cfg.f_min, np.float32)
+    f_n[cohort] = np.asarray(sub.f_n)
+    gamma = np.full(N + S, float(opts.gamma_default), np.float32)
+    sg = np.asarray(sub.gamma)
+    gamma[:N][cohort] = sg[:K]
+    gamma[N:] = sg[K:]
+    m = np.full(N + S, float(opts.m_default), np.float32)
+    sm = np.asarray(sub.m)
+    m[:N][cohort] = sm[:K]
+    m[N:] = sm[K:]
+    I_nb = np.eye(B, dtype=np.float32)[
+        np.argmax(np.asarray(net.R_nb), axis=1)]
+    I_nb[cohort] = np.asarray(sub.I_nb)
+    I_bn = np.zeros((B, N), np.float32)
+    I_bn[np.argmax(np.asarray(net.R_bn), axis=0), np.arange(N)] = 1.0
+    I_bn[:, cohort] = np.asarray(sub.I_bn)
+    return RoundPlan(
+        rho_nb=jnp.asarray(rho_nb), rho_bs=sub.rho_bs,
+        f_n=jnp.asarray(f_n), z_s=sub.z_s,
+        gamma=jnp.asarray(gamma), m=jnp.asarray(m),
+        I_s=sub.I_s, I_nb=jnp.asarray(I_nb), I_bn=jnp.asarray(I_bn),
+        R_bs=sub.R_bs, delta_A=sub.delta_A, delta_R=sub.delta_R)
 
 
 # ----------------------------------------------------------- engine -----
@@ -526,6 +621,10 @@ class StagedRound:
     key: jax.Array
     events: object
     t0: float
+    # --- per-round client sampling (EngineOptions.cohort_size) ---
+    cohort: Optional[np.ndarray] = None   # sorted drawn UE indices, or None
+    sub_net: object = None                # topology.subnetwork view
+    sub_plan: Optional[RoundPlan] = None  # the cohort-dims plan (costing)
 
 
 class Engine:
@@ -552,7 +651,8 @@ class Engine:
         self.scenario = get_scenario(
             scenario if scenario is not None else self.opts.scenario)
         self.executor = executor if executor is not None else \
-            SimExecutor(kernel_backend=self.opts.kernel_backend)
+            SimExecutor(kernel_backend=self.opts.kernel_backend,
+                        mesh_shape=self.opts.mesh_shape)
         self.callbacks: List[RoundCallback] = list(callbacks)
         self.validate_plans = validate_plans
         self.consts = consts
@@ -565,9 +665,16 @@ class Engine:
         return callback
 
     def decide(self, net_t, D_bar, t: int,
-               prev_plan: Optional[RoundPlan]) -> RoundPlan:
-        ctx = DecisionContext(round=t, consts=self.consts, ow=self.ow,
-                              opts=self.opts, prev_plan=prev_plan)
+               prev_plan: Optional[RoundPlan], *,
+               consts=None) -> RoundPlan:
+        """``consts`` overrides the engine's MLConstants for this call —
+        the cohort path hands in constants gathered to the cohort's
+        per-DPU rows."""
+        ctx = DecisionContext(round=t,
+                              consts=self.consts if consts is None
+                              else consts,
+                              ow=self.ow, opts=self.opts,
+                              prev_plan=prev_plan)
         # strategies receive D_bar as a device array: the jit solver backend
         # consumes it directly (no numpy bounce on the decision hot path)
         plan = self.strategy.decide(net_t, jnp.asarray(D_bar, jnp.float32),
@@ -610,10 +717,24 @@ class Engine:
                          key=jax.random.PRNGKey(opts.seed),
                          params=params, loss_fn=loss_fn, eval_fn=eval_fn)
 
+    def _cohort_consts(self, n_ue: int, cohort: np.ndarray):
+        """MLConstants with the per-DPU arrays gathered to the cohort's
+        (K + S) rows (scalar / mis-sized fields pass through)."""
+        c = self.consts
+
+        def gather(a):
+            a = np.asarray(a)
+            if a.ndim == 0 or a.shape[0] < n_ue:
+                return a
+            return np.concatenate([a[:n_ue][cohort], a[n_ue:]])
+
+        return dataclasses.replace(c, theta_i=gather(c.theta_i),
+                                   sigma_i=gather(c.sigma_i))
+
     def begin_round(self, state: LoopState, online_datasets) -> StagedRound:
-        """Host side of round ``state.t``: scenario tick, plan decision,
-        offloading realization, PRNG advance.  Mutates ``state`` (rng,
-        key, plan) exactly as the solo loop does."""
+        """Host side of round ``state.t``: scenario tick, cohort draw,
+        plan decision, offloading realization, PRNG advance.  Mutates
+        ``state`` (rng, key, plan) exactly as the solo loop does."""
         opts = self.opts
         t = state.t
         t0 = time.time()
@@ -622,15 +743,56 @@ class Engine:
         # drifted per-UE data, and the round's environment events
         net_t, data_per_ue, events = self.scenario.step(
             t, online_datasets, state.rng)
+        N = len(data_per_ue)
+        cohort = sub_net = sub_plan = None
+        if opts.cohort_size is not None and opts.cohort_size < N:
+            # per-round client sampling: K UEs drawn uniformly without
+            # replacement; the rest observe no round data, so the
+            # executors' live-DPU filter drops them before any device
+            # work and the solver sees only the (K, B, S) subproblem.
+            # The rng draw happens ONLY on this branch, so cohort-off
+            # runs keep their seeded traces bit-identical.
+            if opts.distributed_solver:
+                raise ValueError(
+                    "cohort_size is incompatible with distributed_solver: "
+                    "the cohort subnetwork has no consensus graph")
+            cohort = np.sort(state.rng.choice(N, opts.cohort_size,
+                                              replace=False))
+            mask = np.zeros(N, bool)
+            mask[cohort] = True
+            data_per_ue = [
+                d if mask[n] else
+                jax.tree_util.tree_map(lambda x: x[:0], d)
+                for n, d in enumerate(data_per_ue)]
+            from repro.network.topology import subnetwork
+            sub_net = subnetwork(net_t, cohort)
         D_bar = np.array([len(d["y"]) for d in data_per_ue], float)
         if state.plan is None or t % opts.reoptimize_every == 0:
-            state.plan = self.decide(net_t, D_bar, t, prev_plan=state.plan)
+            if cohort is None:
+                state.plan = self.decide(net_t, D_bar, t,
+                                         prev_plan=state.plan)
+            else:
+                # gather -> solve the K-UE subproblem -> scatter.  A
+                # fixed K keeps hitting the solver's (K, B, S) compile
+                # cache no matter how large the population is.
+                sub_prev = None if state.plan is None else \
+                    _gather_plan(state.plan, cohort, N)
+                sub_plan = self.decide(
+                    sub_net, D_bar[cohort], t, prev_plan=sub_prev,
+                    consts=self._cohort_consts(N, cohort))
+                state.plan = _scatter_plan(sub_plan, cohort, net_t, opts)
+                if self.validate_plans:
+                    state.plan.validate(net_t)
+        elif cohort is not None:
+            sub_plan = _gather_plan(state.plan, cohort, N)
         ue_data, dc_data = realize_offloading(state.rng, data_per_ue,
                                               state.plan, net_t)
         state.key, sub = jax.random.split(state.key)
         return StagedRound(t=t, net_t=net_t, D_bar=D_bar, plan=state.plan,
                            datasets=ue_data + dc_data, n_dc=len(dc_data),
-                           key=sub, events=events, t0=t0)
+                           key=sub, events=events, t0=t0,
+                           cohort=cohort, sub_net=sub_net,
+                           sub_plan=sub_plan)
 
     def should_eval(self, t: int) -> bool:
         every = max(1, getattr(self.opts, "eval_every", 1))
@@ -679,8 +841,19 @@ class Engine:
         the precomputed ``acc`` a sweep executor hands in), report,
         callbacks.  Advances ``state.t``."""
         plan = staged.plan
-        w = plan.to_w()
         scale = tuple(getattr(staged.events, "compute_scale", ()) or ())
+        if staged.cohort is not None and staged.sub_plan is not None:
+            # cohort round: charge the K-UE subproblem, not all N UEs'
+            # model-upload paths — non-cohort UEs transmit nothing
+            w = staged.sub_plan.to_w()
+            cost_net = staged.sub_net
+            cost_D = staged.D_bar[staged.cohort]
+            if scale:
+                scale = tuple(np.asarray(scale)[staged.cohort])
+        else:
+            w = plan.to_w()
+            cost_net = staged.net_t
+            cost_D = staged.D_bar
         if scale:
             # stragglers: the plan's idealized f_n vs the realized rate —
             # the slowdown is charged through the Sec. II-E cost model
@@ -688,7 +861,7 @@ class Engine:
             w = dict(w)
             w["f_n"] = jnp.asarray(w["f_n"]) * jnp.asarray(
                 scale, jnp.float32)
-        costs = network_costs(w, staged.net_t, staged.D_bar)
+        costs = network_costs(w, cost_net, cost_D)
         E = float(round_energy(costs, self.ow.xi3_sub))
         Dl = float(round_delay(costs))
         state.cum_E += E

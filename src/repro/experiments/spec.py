@@ -120,6 +120,20 @@ class EngineSpec:
     robust_agg: str = "none"        # byzantine counter: "none" /
                                     # "trimmed_mean" / "median"
     trim_frac: float = 0.1
+    mesh_shape: Optional[Tuple[int, int]] = None
+                                    # ('dpu', 'rows') device-mesh split for
+                                    # the sharded plane round; None ->
+                                    # single-device
+    cohort_size: Optional[int] = None
+                                    # per-round client sampling (K UEs drawn
+                                    # per round); None -> full participation
+
+    def __post_init__(self):
+        # JSON round-trip: the default is None, so _from_dict cannot infer
+        # the tuple shape — coerce a deserialized list here
+        if isinstance(self.mesh_shape, list):
+            object.__setattr__(self, "mesh_shape",
+                               tuple(int(x) for x in self.mesh_shape))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,7 +168,10 @@ class ExperimentSpec:
             rate_jitter=e.rate_jitter, seed=int(seed),
             eval_every=e.eval_every, kernel_backend=e.kernel_backend,
             sanitize=e.sanitize, robust_agg=e.robust_agg,
-            trim_frac=e.trim_frac)
+            trim_frac=e.trim_frac,
+            mesh_shape=None if e.mesh_shape is None
+            else tuple(int(x) for x in e.mesh_shape),
+            cohort_size=e.cohort_size)
 
     @property
     def run_seeds(self) -> Tuple[int, ...]:

@@ -72,11 +72,12 @@ def network_costs(w: Dict, net, D_bar) -> Dict:
                      + cfg.idle_fraction * cfg.dc_peak_power
                      * cfg.machines_per_dc)
 
-    # --- aggregation path (eqs. 30-35)
-    d_n_A = jnp.sum(d_nb_M * I_nb, axis=1) + \
-        jnp.sum(I_nb[:, :, None] * d_bs_M[None] * I_s[None, None], axis=(1, 2))
-    E_n_A = jnp.sum(E_nb_M * I_nb, axis=1) + \
-        jnp.sum(I_nb[:, :, None] * E_bs_M[None] * I_s[None, None], axis=(1, 2))
+    # --- aggregation path (eqs. 30-35).  The BS->DC hop is factored as
+    # I_nb @ (d_bs_M @ I_s): the naive sum_{b,s} I_nb*d_bs_M*I_s form
+    # materializes an (N, B, S) tensor — ~10 GB at N=10^5 — for what is
+    # two small matvecs.
+    d_n_A = jnp.sum(d_nb_M * I_nb, axis=1) + I_nb @ (d_bs_M @ I_s)
+    E_n_A = jnp.sum(E_nb_M * I_nb, axis=1) + I_nb @ (E_bs_M @ I_s)
     d_s_A = jnp.sum(d_ss_M * I_s[None, :], axis=1)
     E_s_A = jnp.sum(E_ss_M * I_s[None, :], axis=1)
     delta_A_req = jnp.maximum(jnp.max(d_n_A + d_n_P),

@@ -101,9 +101,35 @@ def pathloss_gain(d_m):
     return 10.0 ** (-(128.1 + 37.6 * np.log10(d_km)) / 10.0)
 
 
+def subnetwork(net: Network, ue_idx) -> Network:
+    """The network restricted to the UE subset ``ue_idx`` (BSs/DCs kept).
+
+    The cohort-sampling view: per-round client sampling solves the
+    orchestration problem over the K drawn UEs only, so every UE-indexed
+    rate matrix is gathered to the cohort rows.  The consensus graph is
+    dropped (a UE-subset of H is not a valid consensus topology —
+    cohort runs use the centralized solver).
+    """
+    ue_idx = np.asarray(ue_idx, int)
+    cfg = dataclasses.replace(net.cfg, num_ue=int(ue_idx.shape[0]))
+    return dataclasses.replace(
+        net, cfg=cfg, R_nb=net.R_nb[ue_idx], R_bn=net.R_bn[:, ue_idx],
+        subnet_of_ue=net.subnet_of_ue[ue_idx],
+        adjacency=np.zeros((0, 0), dtype=int))
+
+
 def make_network(cfg: NetworkConfig = NetworkConfig(),
-                 edge_prob: float = 0.3) -> Network:
-    """Synthetic 5G/CBRS-testbed-like network (App. F-D)."""
+                 edge_prob: float = 0.3, *,
+                 consensus: bool = True) -> Network:
+    """Synthetic 5G/CBRS-testbed-like network (App. F-D).
+
+    ``consensus=False`` skips the O(V^2) consensus graph (only the
+    distributed solver reads ``adjacency``) and draws the channel gains
+    vectorized — required past ~10^4 UEs, where the per-pair Python loop
+    and the dense (V, V) adjacency become the wall.  The two modes draw
+    from the rng in different orders, so a seeded topology is
+    reproducible only within one mode.
+    """
     rng = np.random.RandomState(cfg.seed)
     N, B, S = cfg.num_ue, cfg.num_bs, cfg.num_dc
     bs_per_dc = max(1, B // S)
@@ -112,12 +138,18 @@ def make_network(cfg: NetworkConfig = NetworkConfig(),
     subnet_of_ue = np.minimum(np.arange(N) // ue_per_dc, S - 1)
 
     # channel gains: intra-subnet strong, inter-subnet weak (path loss)
-    gain = np.zeros((N, B))
-    for n in range(N):
-        for b in range(B):
-            same = subnet_of_ue[n] == subnet_of_bs[b]
-            d = rng.uniform(50, 200) if same else rng.uniform(400, 1200)
-            gain[n, b] = pathloss_gain(d) * rng.rayleigh(1.0) ** 2
+    if consensus:
+        gain = np.zeros((N, B))
+        for n in range(N):
+            for b in range(B):
+                same = subnet_of_ue[n] == subnet_of_bs[b]
+                d = rng.uniform(50, 200) if same else rng.uniform(400, 1200)
+                gain[n, b] = pathloss_gain(d) * rng.rayleigh(1.0) ** 2
+    else:
+        same = subnet_of_ue[:, None] == subnet_of_bs[None, :]
+        d = np.where(same, rng.uniform(50, 200, (N, B)),
+                     rng.uniform(400, 1200, (N, B)))
+        gain = pathloss_gain(d) * rng.rayleigh(1.0, (N, B)) ** 2
     R_nb = shannon_rate(cfg.bandwidth_hz, cfg.ue_tx_power, gain,
                         cfg.noise_density)
     R_bn = shannon_rate(cfg.bandwidth_hz, cfg.bs_tx_power, gain.T,
@@ -137,6 +169,11 @@ def make_network(cfg: NetworkConfig = NetworkConfig(),
 
     # consensus communication graph H (App. G-C): random edges, p=0.3,
     # plus connectivity guarantees (UE>=1 BS, BS>=1 DC, DC>=1 DC)
+    if not consensus:
+        return Network(cfg=cfg, R_nb=R_nb, R_bn=R_bn, R_bs_max=R_bs_max,
+                       R_s_max=R_s_max, R_ss=R_ss, R_sb=R_sb,
+                       subnet_of_bs=subnet_of_bs, subnet_of_ue=subnet_of_ue,
+                       adjacency=np.zeros((0, 0), dtype=int))
     V = N + B + S
     A = np.zeros((V, V), dtype=int)
     def add(i, j):

@@ -1,3 +1,9 @@
 from repro.sharding.specs import (  # noqa: F401
-    batch_spec, cache_specs, param_specs, shard_ctx_for,
+    batch_spec, cache_specs, param_specs, sanitize_spec, sanitize_tree,
+    shard_ctx_for,
+)
+from repro.sharding.plane import (  # noqa: F401
+    DPU_AXIS, ROW_AXIS, fedprox_accum_plane_sharded,
+    local_round_plane_sharded, nova_aggregate_plane_sharded, plane_axes,
+    plane_mesh, robust_aggregate_plane_sharded,
 )

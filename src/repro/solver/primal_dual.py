@@ -15,9 +15,13 @@ expressed as
 
   * a ``vmap`` over the V nodes' candidate evaluations (one vjp of the
     constraint vector per dual row instead of a materialized jacobian),
-  * the Algorithm-2 masked merge as a single ownership-matrix contraction,
+  * the Algorithm-2 masked merge as a segment-structured gather over the
+    flat UE->BS/DC owner index (``variables.ownership_merge``) — the dense
+    (V, P) ownership matrix is never materialized,
   * the per-node convexified constraints (eqs. 84-85) as a ``vmap`` of the
-    constraint linearization over masked diffs,
+    constraint linearization over on-the-fly masked diffs, with the
+    quadratic terms as one ``jax.ops.segment_sum``
+    (``variables.node_sq_norms``),
   * the J consensus rounds as one ``lax.scan`` (:func:`consensus_scan`),
   * the primal-dual alternations as a ``lax.while_loop`` with the same
     tol-based early exit as the oracle.
@@ -66,10 +70,15 @@ def make_surrogate(spec: V.WSpec, hyper: PDHyper, ow: ObjectiveWeights,
     L_s, zeta1_s, zeta2_s, f0_s = consts_scalars
     lam1, L_C, kappa = hyper.lambda1, hyper.L_C, hyper.kappa
     cscale = K.constraint_scale(spec.dims)
-    M_own = jnp.asarray(V.ownership_matrix(spec.dims))
     # The oracle's ctilde always spreads C0 over the FULL node count (the
     # per-node decomposition of eq. 84), in the centralized variant too.
-    V_nodes = M_own.shape[0]
+    # The dense (V, P) ownership matrix is NEVER materialized here: the
+    # centralized path needs only the node count, and the distributed
+    # path runs the segment-sum ownership ops over the flat owner index
+    # (variables.ownership_merge / owner_mask / node_sq_norms) — at
+    # N=10^5 UEs the matrix would be ~1 TB.
+    N_d, B_d, S_d = spec.dims
+    V_nodes = N_d + B_d + S_d
 
     def fn(w_l, Lambda, net, D_bar, theta_i, sigma_i, scale_flat, W_cons):
         consts = MLConstants(L=L_s, theta_i=theta_i, sigma_i=sigma_i,
@@ -102,10 +111,15 @@ def make_surrogate(spec: V.WSpec, hyper: PDHyper, ow: ObjectiveWeights,
         def pd_iteration(Lambda):
             if distributed:
                 cands = jax.vmap(candidate)(Lambda)              # (V, P)
-                w_hat = proj_flat(jnp.einsum("vp,vp->p", M_own, cands))
-                diff = (w_hat - w_l)[None, :] * M_own            # (V, P)
-                lin = jax.vmap(con_lin)(diff)                    # (V, nC)
-                sq = 0.5 * L_C * jnp.sum(diff * diff, axis=1)
+                w_hat = proj_flat(V.ownership_merge(cands, spec.dims))
+                d = w_hat - w_l
+                # per-node masked diffs (rows of the old (V, P) product)
+                # built on the fly inside the vmap; squared norms via one
+                # segment_sum over the flat owner index
+                lin = jax.vmap(
+                    lambda v: con_lin(d * V.owner_mask(v, spec.dims)))(
+                        jnp.arange(V_nodes))                     # (V, nC)
+                sq = 0.5 * L_C * V.node_sq_norms(d, spec.dims)
                 ctilde = C0 / V_nodes + lin + sq[:, None]        # (84)-(85)
                 new_L = Lambda + kappa * ctilde                  # (96)
                 new_L = consensus_scan(new_L, W_cons,

@@ -84,7 +84,13 @@ def ownership_matrix(dims) -> np.ndarray:
     """(V, P) ownership-mask matrix, built with array ops (no per-node
     loops).  Rows partition the flat w: exactly-one-owner components are
     one-hot columns; the DC-co-owned delta entries carry weight 1/S on every
-    DC row, so ``M @ candidates`` is the Algorithm-2 masked merge."""
+    DC row, so ``M @ candidates`` is the Algorithm-2 masked merge.
+
+    Host-side / oracle use only: the jitted backend never materializes
+    this (V, P) matrix — it runs the segment-sum equivalents below
+    (:func:`ownership_merge` / :func:`owner_mask` / :func:`node_sq_norms`)
+    over the flat :func:`owner_index` map, which is what lets the solver
+    scale to 10^5 UEs (the dense matrix is ~1 TB there)."""
     N, B, S = dims
     Vn = N + B + S
     own = owner_index(dims)
@@ -93,6 +99,45 @@ def ownership_matrix(dims) -> np.ndarray:
     dc_rows[N + B:] = 1.0 / S
     M[:, own < 0] = dc_rows[:, None]
     return M
+
+
+def ownership_merge(cands, dims):
+    """Algorithm-2 masked merge ``einsum("vp,vp->p", M_own, cands)``
+    without the (V, P) matrix: every single-owner component gathers its
+    owner's candidate row; the DC-co-owned delta entries take the mean
+    over the DC rows (the 1/S weights of :func:`ownership_matrix`).
+    Traceable; ``cands`` is the (V, P) candidate stack."""
+    N, B, S = dims
+    own = jnp.asarray(owner_index(dims))
+    gathered = cands[jnp.clip(own, 0), jnp.arange(own.shape[0])]
+    dc_mean = jnp.mean(cands[N + B:], axis=0)
+    return jnp.where(own >= 0, gathered, dc_mean)
+
+
+def owner_mask(v, dims):
+    """Row ``v`` of :func:`ownership_matrix`, built on the fly from the
+    flat owner index — safe to vmap over traced node ids inside jit, so
+    the per-node masked diffs of Algorithm 2 never bake a (V, P)
+    constant into the executable."""
+    N, B, S = dims
+    own = jnp.asarray(owner_index(dims))
+    co_owned = (own < 0) & (v >= N + B)
+    return jnp.where(own == v, 1.0, jnp.where(co_owned, 1.0 / S, 0.0))
+
+
+def node_sq_norms(d, dims):
+    """Per-node squared norms ``sum_p (d * mask_v)_p^2`` for all V nodes
+    as ONE ``jax.ops.segment_sum`` over the flat owner index (instead of
+    reducing a masked (V, P) materialization).  The co-owned delta
+    entries contribute ``(d/S)^2`` to every DC row."""
+    N, B, S = dims
+    own_np = owner_index(dims)
+    seg = jnp.asarray(np.maximum(own_np, 0))
+    single = jnp.asarray((own_np >= 0).astype(np.float32))
+    sq = jax.ops.segment_sum(single * d * d, seg, num_segments=N + B + S)
+    delta_sq = jnp.sum((1.0 - single) * d * d) / (S * S)
+    is_dc = jnp.arange(N + B + S) >= N + B
+    return sq + jnp.where(is_dc, delta_sq, 0.0)
 
 
 def init_w(net, D_bar, rng=None) -> Dict:

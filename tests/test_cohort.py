@@ -1,0 +1,148 @@
+"""Per-round client sampling (EngineOptions.cohort_size): gather/scatter
+plan embedding, subnetwork restriction, engine integration, and the
+default-off bit-identity contract.  Single-device — runs in tier-1 and in
+the shard-parity CI lane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Engine, EngineOptions, MLConstants
+from repro.core.engine import _gather_plan, _scatter_plan
+from repro.data import make_image_dataset, make_online_ues
+from repro.models.classifier import (ClassifierConfig, classifier_accuracy,
+                                     classifier_loss,
+                                     init_classifier_params)
+from repro.network.topology import NetworkConfig, make_network, subnetwork
+from repro.solver import ObjectiveWeights
+
+N_UE, N_BS, N_DC = 8, 3, 2
+NET = make_network(NetworkConfig(num_ue=N_UE, num_bs=N_BS, num_dc=N_DC))
+CONSTS = MLConstants(L=5.0, theta_i=np.ones(N_UE + N_DC) * 2,
+                     sigma_i=np.ones(N_UE + N_DC) * 3, zeta1=2.0,
+                     zeta2=1.0)
+CCFG = ClassifierConfig(input_shape=(10, 10, 1), hidden=(32,))
+
+
+# ------------------------------------------------------- subnetwork ------
+
+def test_subnetwork_restricts_ue_rows():
+    cohort = np.array([1, 4, 6])
+    sub = subnetwork(NET, cohort)
+    assert sub.cfg.num_ue == 3
+    assert sub.dims == (3, N_BS, N_DC)
+    np.testing.assert_array_equal(np.asarray(sub.R_nb),
+                                  np.asarray(NET.R_nb)[cohort])
+    np.testing.assert_array_equal(np.asarray(sub.R_bn),
+                                  np.asarray(NET.R_bn)[:, cohort])
+    np.testing.assert_array_equal(sub.subnet_of_ue,
+                                  NET.subnet_of_ue[cohort])
+    # BS/DC-side arrays are untouched
+    np.testing.assert_array_equal(np.asarray(sub.R_bs_max),
+                                  np.asarray(NET.R_bs_max))
+
+
+# ------------------------------------------- plan gather / scatter -------
+
+def _full_plan():
+    eng = Engine(NET, "cefl", consts=CONSTS,
+                 ow=ObjectiveWeights(T=3),
+                 opts=EngineOptions(rounds=3, seed=0, solver_outer=2))
+    D_bar = np.linspace(200.0, 600.0, N_UE)
+    return eng, eng.decide(NET, D_bar, 0, None)
+
+
+def test_gather_scatter_roundtrip_validates_and_preserves_cohort():
+    eng, plan = _full_plan()
+    cohort = np.array([0, 2, 5, 7])
+    sub = _gather_plan(plan, cohort, N_UE)
+    assert sub.rho_nb.shape == (4, N_BS)
+    assert sub.I_bn.shape == (N_BS, 4)
+    assert sub.gamma.shape == (4 + N_DC,)
+
+    full = _scatter_plan(sub, cohort, NET, eng.opts).validate(NET)
+    # cohort rows round-trip exactly
+    np.testing.assert_array_equal(np.asarray(full.rho_nb)[cohort],
+                                  np.asarray(sub.rho_nb))
+    np.testing.assert_array_equal(np.asarray(full.f_n)[cohort],
+                                  np.asarray(sub.f_n))
+    np.testing.assert_array_equal(np.asarray(full.I_nb)[cohort],
+                                  np.asarray(sub.I_nb))
+    # non-cohort UEs sit the round out: no offloading, idle frequency,
+    # default local-training settings
+    rest = np.setdiff1d(np.arange(N_UE), cohort)
+    assert np.all(np.asarray(full.rho_nb)[rest] == 0.0)
+    assert np.all(np.asarray(full.f_n)[rest] == NET.cfg.f_min)
+    g = np.asarray(full.gamma)
+    m = np.asarray(full.m)
+    assert np.all(g[:N_UE][rest] == float(eng.opts.gamma_default))
+    assert np.all(m[:N_UE][rest] == float(eng.opts.m_default))
+    # DC tail comes from the sub-plan, not the defaults
+    np.testing.assert_array_equal(g[N_UE:], np.asarray(sub.gamma)[4:])
+    # associations stay one-hot rows / columns at full dims
+    I_nb = np.asarray(full.I_nb)
+    I_bn = np.asarray(full.I_bn)
+    np.testing.assert_allclose(I_nb.sum(axis=1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(I_bn.sum(axis=0), 1.0, atol=1e-6)
+
+
+# --------------------------------------------------- engine runs ---------
+
+(_TRX, _TRY), (_TEX, _TEY) = make_image_dataset(2500, (10, 10, 1))
+_P0 = init_classifier_params(jax.random.PRNGKey(0), CCFG)
+
+
+def _run(**opt_kw):
+    opts = EngineOptions(rounds=3, seed=0, solver_outer=2, **opt_kw)
+    ues = make_online_ues(_TRX, _TRY, num_ue=N_UE, mean_arrivals=150,
+                          std_arrivals=15)
+    eng = Engine(NET, "cefl", consts=CONSTS, ow=ObjectiveWeights(T=3),
+                 opts=opts)
+
+    def eval_fn(p):
+        return classifier_accuracy(p, jnp.asarray(_TEX[:300]),
+                                   jnp.asarray(_TEY[:300]))
+
+    return eng.run(ues, init_params=_P0, loss_fn=classifier_loss,
+                   eval_fn=eval_fn)
+
+
+def test_cohort_run_produces_finite_costed_rounds():
+    res = _run(cohort_size=4)
+    assert len(res.reports) == 3
+    for r in res.reports:
+        assert np.isfinite(r.loss) and np.isfinite(r.acc)
+        assert np.isfinite(r.energy) and np.isfinite(r.delay)
+    # costs come from the K-UE subproblem, so a quarter-strength cohort
+    # must spend less than full participation
+    full = _run()
+    assert res.final.cum_energy < full.final.cum_energy
+
+
+def test_cohort_off_is_bit_identical_and_k_ge_n_is_noop():
+    a = _run()
+    b = _run()            # cohort machinery off: trace fully deterministic
+    big = _run(cohort_size=N_UE)   # K >= N draws nothing: same trace
+    for x, y in ((a, b), (a, big)):
+        assert [r.acc for r in x.reports] == [r.acc for r in y.reports]
+        assert [r.energy for r in x.reports] == \
+            [r.energy for r in y.reports]
+        for la, lb in zip(jax.tree_util.tree_leaves(x.params),
+                          jax.tree_util.tree_leaves(y.params)):
+            assert bool(jnp.all(la == lb))
+
+
+def test_cohort_rejects_distributed_solver():
+    with pytest.raises(ValueError, match="cohort"):
+        _run(cohort_size=4, distributed_solver=True)
+
+
+def test_cohort_spec_roundtrips_through_json():
+    from repro.experiments.spec import ExperimentSpec, from_json, to_json
+    spec = ExperimentSpec().override(**{"engine.cohort_size": 4,
+                                        "engine.mesh_shape": (4, 2)})
+    back = from_json(to_json(spec))
+    assert back.engine.cohort_size == 4
+    assert back.engine.mesh_shape == (4, 2)
+    opts = back.engine_options(0)
+    assert opts.cohort_size == 4 and opts.mesh_shape == (4, 2)
