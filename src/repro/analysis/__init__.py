@@ -18,6 +18,12 @@ defenses into standing, CI-enforced rules:
   :mod:`repro.analysis.pytest_plugin`), a PRNG-key-reuse detector, and
   NaN/Inf checks — all switched on end-to-end by
   ``EngineOptions(sanitize=True)``.
+* :mod:`repro.analysis.jaxpr` — the trace-level program auditor
+  (``python -m repro.analysis audit``): hot-path entry points register
+  tiny-shape contracts at their definition sites; five passes
+  (JXP001-JXP005) check collectives, dtype discipline, memory budgets,
+  buffer donation, and fusion boundaries over the jaxprs and lowered
+  StableHLO that XLA actually sees.
 
 See ``docs/static_analysis.md`` for the rule catalogue and the PR-1..5
 incidents that motivated each rule.
@@ -34,4 +40,14 @@ __all__ = [
     "render_findings", "RULES", "Rule",
     "CompileMonitor", "KeyReuseDetector", "SanitizerError",
     "check_finite", "compile_counts", "no_retrace",
+    "jaxpr",
 ]
+
+
+def __getattr__(name):
+    # the jaxpr auditor imports jax at module level; loaded on demand so
+    # the AST linter/CLI paths stay import-light
+    if name == "jaxpr":
+        import importlib
+        return importlib.import_module("repro.analysis.jaxpr")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -11,6 +11,12 @@ Commands:
   (:mod:`repro.analysis.corpus`); exit 1 on any miss.  This is the
   linter's own tier-1 gate in CI.
 * ``rules`` — print the rule catalogue.
+* ``audit`` — trace every registered hot-path contract and run the
+  jaxpr/HLO passes (:mod:`repro.analysis.jaxpr`).  Exit 1 on any
+  violation.  ``--devices N`` forces N virtual CPU devices (the sharded
+  contracts need 8); ``--select NAME,...`` restricts contracts;
+  ``--passes JXP001,...`` restricts passes; ``--json``/``--out`` as for
+  ``lint``.
 """
 from __future__ import annotations
 
@@ -71,6 +77,34 @@ def _cmd_selftest(_args) -> int:
     return 0
 
 
+def _cmd_audit(args) -> int:
+    if args.devices:
+        # must land before the backend initializes; jax initializes its
+        # CPU client lazily, so setting the flag here (pre-first-trace)
+        # is sufficient even though repro.analysis imported jax already
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+    import json as _json
+
+    from repro.analysis.jaxpr import render_report, run_audit
+    select = args.select.split(",") if args.select else None
+    pass_ids = args.passes.split(",") if args.passes else None
+    report = run_audit(select=select, pass_ids=pass_ids)
+    text = (_json.dumps(report.to_json(), indent=2) if args.json
+            else render_report(report, hints=not args.no_hints))
+    print(text)
+    if args.out:
+        parent = os.path.dirname(args.out)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(text + "\n")
+    return 0 if report.ok else 1
+
+
 def _cmd_rules(_args) -> int:
     for code, rule in sorted(RULES.items()):
         if code == "RPA000":
@@ -99,6 +133,20 @@ def main(argv=None) -> int:
     p_self.set_defaults(fn=_cmd_selftest)
     p_rules = sub.add_parser("rules", help="print the rule catalogue")
     p_rules.set_defaults(fn=_cmd_rules)
+    p_audit = sub.add_parser(
+        "audit", help="trace registered contracts, run jaxpr/HLO passes")
+    p_audit.add_argument("--json", action="store_true")
+    p_audit.add_argument("--out", default=None,
+                         help="also write the report to this file")
+    p_audit.add_argument("--select", default=None,
+                         help="comma-separated contract names")
+    p_audit.add_argument("--passes", default=None,
+                         help="comma-separated pass ids (JXP001,...)")
+    p_audit.add_argument("--devices", type=int, default=None,
+                         help="force N virtual CPU devices (sharded "
+                              "contracts need 8)")
+    p_audit.add_argument("--no-hints", action="store_true")
+    p_audit.set_defaults(fn=_cmd_audit)
     args = parser.parse_args(argv)
     return args.fn(args)
 

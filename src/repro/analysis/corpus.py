@@ -401,6 +401,167 @@ def host_stats(x):
 """,
         ],
     },
+    "RPA009": {
+        "bad": [
+            # debug.print inside a scan body — per-iteration host trip
+            """
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(carry, x):
+    jax.debug.print("step {}", x)
+    return carry + x, None
+
+
+def run(xs):
+    return lax.scan(body, jnp.zeros(()), xs)
+""",
+            # pure_callback in a fori_loop body (third positional arg)
+            """
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def log_host(x):
+    return x
+
+
+def body(i, acc):
+    v = jax.pure_callback(log_host, jax.ShapeDtypeStruct((), jnp.float32),
+                          acc)
+    return acc + v
+
+
+def run(n):
+    return lax.fori_loop(0, n, body, jnp.zeros(()))
+""",
+            # transitively: helper called from a while_loop body
+            """
+import jax
+from jax import lax
+from jax.experimental import io_callback
+
+
+def report(x):
+    io_callback(print, None, x)
+    return x
+
+
+def body(x):
+    return report(x) - 1.0
+
+
+def run(x):
+    return lax.while_loop(lambda x: x > 0, body, x)
+""",
+        ],
+        "good": [
+            # callback outside the loop — one host trip per call
+            """
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(carry, x):
+    return carry + x, None
+
+
+def run(xs):
+    out, _ = lax.scan(body, jnp.zeros(()), xs)
+    jax.debug.print("total {}", out)
+    return out
+""",
+            # plain jnp math inside the body
+            """
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(i, acc):
+    return acc + jnp.sin(i.astype(jnp.float32))
+
+
+def run(n):
+    return lax.fori_loop(0, n, body, jnp.zeros(()))
+""",
+        ],
+    },
+    "RPA010": {
+        "bad": [
+            # float list literal, no dtype: strong f64 under x64
+            """
+import jax.numpy as jnp
+
+SCALES = jnp.array([0.5, 1.0, 2.0])
+""",
+            # asarray of a float tuple literal
+            """
+import jax.numpy as jnp
+
+
+def grid():
+    return jnp.asarray((0.1, 0.2))
+""",
+            # linspace with float bounds and no dtype
+            """
+import jax.numpy as jnp
+
+
+def axis():
+    return jnp.linspace(0.0, 1.0, 16)
+""",
+        ],
+        "good": [
+            # full with a Python-scalar fill stays WEAK-typed — safe
+            """
+import jax.numpy as jnp
+
+
+def fill(n):
+    return jnp.full((n,), 0.5)
+""",
+            # pinned dtype
+            """
+import jax.numpy as jnp
+
+SCALES = jnp.array([0.5, 1.0, 2.0], dtype=jnp.float32)
+""",
+            # dtype passed positionally
+            """
+import jax.numpy as jnp
+
+
+def weights(ds):
+    return jnp.asarray(ds, jnp.float32)
+""",
+            # Python scalar stays weak-typed — safe by design
+            """
+import jax.numpy as jnp
+
+
+def half():
+    return jnp.asarray(0.5)
+""",
+            # int literals never promote to f64
+            """
+import jax.numpy as jnp
+
+IDX = jnp.array([0, 1, 2])
+""",
+            # factory with explicit dtype keyword
+            """
+import jax.numpy as jnp
+
+
+def axis():
+    return jnp.linspace(0.0, 1.0, 16, dtype=jnp.float32)
+""",
+        ],
+    },
 }
 
 # Cross-module corpora for RPA007: name -> {"files": {...}, "expect": bool}

@@ -1,0 +1,41 @@
+"""Trace-level program auditor: contract passes over jaxprs and lowered
+StableHLO of the repo's hot-path entry points.
+
+The AST linter (``repro.analysis.rules``) sees source; this package sees
+the programs XLA actually runs.  Entry points register tiny-shape
+builders with the :func:`~repro.analysis.jaxpr.contracts.contract`
+decorator at their definition sites; ``python -m repro.analysis audit``
+traces them and runs five passes (JXP001-JXP005: collectives, dtype
+discipline, memory budgets, donation, fusion boundaries).  See
+``docs/static_analysis.md`` for the pass catalogue and the PR-7/PR-9
+incidents each pass codifies.
+
+Import discipline: this ``__init__`` (and ``contracts``/``passes``)
+stay free of ``repro.core``/``solver``/``sharding`` imports — those
+packages import *us* at module level to register their contracts; the
+audit side only touches them lazily through ``discover()``.
+"""
+from repro.analysis.jaxpr.contracts import (REGISTRY, ContractSpec,
+                                            Program, contract, discover)
+from repro.analysis.jaxpr.passes import (PASS_DOCS, PASSES, AuditFinding,
+                                         ProgramTrace, count_primitives,
+                                         iter_eqns, run_passes)
+
+__all__ = [
+    "REGISTRY", "ContractSpec", "Program", "contract", "discover",
+    "PASS_DOCS", "PASSES", "AuditFinding", "ProgramTrace",
+    "count_primitives", "iter_eqns", "run_passes",
+    "run_audit", "render_report", "AuditReport",
+]
+
+
+def __getattr__(name):
+    # run_audit pulls in the pass implementations (jax-heavy); loaded on
+    # first use so `import repro.core.fedprox` (which imports contracts
+    # for registration) stays light
+    if name in ("run_audit", "render_report", "AuditReport",
+                "audit_contract", "ContractReport"):
+        from repro.analysis.jaxpr import audit as _audit
+        return getattr(_audit, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

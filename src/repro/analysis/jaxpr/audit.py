@@ -1,0 +1,137 @@
+"""Audit orchestrator: discover contracts, trace, run passes, report.
+
+``run_audit()`` is what ``python -m repro.analysis audit`` and the CI
+lane call: it imports every contract-defining module (registration is a
+decorator side effect), builds each contract's tiny Program, runs the
+applicable passes, and returns a structured report.  Contracts that
+need more devices than the host offers (the sharded twins want an
+8-device mesh) are *skipped with a note*, never silently dropped —
+the CI audit job forces 8 virtual CPU devices so they always run there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+# importing the pass modules registers them in PASSES
+from repro.analysis.jaxpr import (collectives, donation, dtypes, fusion,
+                                  memory)                  # noqa: F401
+from repro.analysis.jaxpr.contracts import discover
+from repro.analysis.jaxpr.passes import (PASS_DOCS, AuditFinding,
+                                         ProgramTrace, run_passes)
+
+
+@dataclasses.dataclass
+class ContractReport:
+    name: str
+    module: str
+    doc: str
+    passes_run: List[str]
+    findings: List[AuditFinding]
+    skipped: Optional[str] = None
+    elapsed_s: float = 0.0
+
+    @property
+    def violations(self) -> List[AuditFinding]:
+        return [f for f in self.findings if not f.waived]
+
+
+@dataclasses.dataclass
+class AuditReport:
+    contracts: List[ContractReport]
+
+    @property
+    def violations(self) -> List[AuditFinding]:
+        return [f for c in self.contracts for f in c.violations]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {
+            "ok": self.ok,
+            "n_contracts": len(self.contracts),
+            "n_passes": len(PASS_DOCS),
+            "pass_catalogue": {
+                pid: {"name": name, "summary": summary}
+                for pid, (name, summary) in sorted(PASS_DOCS.items())},
+            "contracts": [{
+                "name": c.name, "module": c.module, "doc": c.doc,
+                "passes_run": c.passes_run, "skipped": c.skipped,
+                "elapsed_s": round(c.elapsed_s, 3),
+                "findings": [dataclasses.asdict(f) for f in c.findings],
+            } for c in self.contracts],
+        }
+
+
+def audit_contract(spec, pass_ids=None) -> ContractReport:
+    """Trace one registered contract and run its passes."""
+    if jax.device_count() < spec.min_devices:
+        return ContractReport(
+            name=spec.name, module=spec.module, doc=spec.doc,
+            passes_run=[], findings=[],
+            skipped=f"needs {spec.min_devices} devices, have "
+                    f"{jax.device_count()} (XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=N)")
+    start = time.perf_counter()
+    ids = list(pass_ids if pass_ids is not None
+               else spec.applicable_passes())
+    try:
+        program = spec.build()
+        findings = run_passes(ProgramTrace(spec, program), ids)
+    except Exception as exc:        # noqa: BLE001 — reported, not raised
+        findings = [AuditFinding(
+            spec.name, "JXP000",
+            f"contract build/trace failed: {type(exc).__name__}: {exc}",
+            hint="the builder in the contract's defining module no "
+                 "longer matches the entry point it audits — fix the "
+                 "builder alongside the refactor that broke it")]
+    return ContractReport(
+        name=spec.name, module=spec.module, doc=spec.doc,
+        passes_run=ids, findings=findings,
+        elapsed_s=time.perf_counter() - start)
+
+
+def run_audit(select: Optional[Sequence[str]] = None,
+              pass_ids: Optional[Sequence[str]] = None) -> AuditReport:
+    """Audit every registered contract (or the ``select`` subset)."""
+    registry: Dict[str, object] = discover()
+    names = sorted(registry)
+    if select:
+        unknown = sorted(set(select) - set(names))
+        if unknown:
+            raise ValueError(f"unknown contract(s) {unknown}; "
+                             f"registered: {names}")
+        names = [n for n in names if n in set(select)]
+    return AuditReport(contracts=[
+        audit_contract(registry[n], pass_ids) for n in names])
+
+
+def render_report(report: AuditReport, hints: bool = True) -> str:
+    lines: List[str] = []
+    for c in report.contracts:
+        if c.skipped:
+            lines.append(f"SKIP {c.name} [{c.module}] — {c.skipped}")
+            continue
+        status = "FAIL" if c.violations else " ok "
+        waived = sum(1 for f in c.findings if f.waived)
+        extra = f", {waived} waived" if waived else ""
+        lines.append(f"{status} {c.name} [{c.module}] "
+                     f"({', '.join(c.passes_run)}; "
+                     f"{len(c.violations)} finding(s){extra}; "
+                     f"{c.elapsed_s:.2f}s) — {c.doc}")
+        for f in c.findings:
+            lines.append("     " + f.render() if hints
+                         else f"     {f.pass_id}: {f.message}")
+    run = [c for c in report.contracts if not c.skipped]
+    skipped = len(report.contracts) - len(run)
+    tail = (f"audit: {len(run)} contract(s) traced, "
+            f"{len(report.violations)} violation(s)")
+    if skipped:
+        tail += f", {skipped} skipped (device count)"
+    lines.append(tail)
+    return "\n".join(lines)

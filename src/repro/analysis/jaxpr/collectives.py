@@ -1,0 +1,81 @@
+"""JXP001 — collective audit.
+
+Two layers:
+
+* **jaxpr** — count collective primitives (``psum``, ``all_gather``,
+  ...) across all sub-jaxprs and compare against the contract's
+  ``collectives`` map.  This is what proves ``reduce="exact"`` really
+  all-gathers and never psums (the bitwise-exactness contract of
+  ``repro.sharding.plane``) while ``reduce="psum"`` runs exactly one
+  psum per reduction — the two modes produce *provably different*
+  jaxprs, pinned per-commit.
+* **compiled HLO** — GSPMD inserts its own collectives when
+  partitioning a jitted program over sharded inputs; the contract's
+  ``hlo_collectives`` set enumerates the allowed ops and anything else
+  (a surprise ``all-to-all`` from a layout change, a ``reduce-scatter``
+  from a donation interaction) is a finding.
+"""
+from __future__ import annotations
+
+import re
+from typing import List
+
+from repro.analysis.jaxpr.passes import (AuditFinding, audit_pass,
+                                         count_primitives)
+
+#: Collective primitives as they appear in jaxprs.
+COLLECTIVE_PRIMS = ("psum", "all_gather", "all_to_all", "ppermute",
+                    "pmax", "pmin", "psum_scatter", "reduce_scatter")
+
+#: Collective ops as they appear in compiled (post-GSPMD) HLO text.
+_HLO_COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|all-to-all|collective-permute|"
+    r"reduce-scatter|collective-broadcast)\b")
+
+
+def _expect_ok(expected, actual: int) -> bool:
+    if isinstance(expected, str) and expected.endswith("+"):
+        return actual >= int(expected[:-1])
+    return actual == int(expected)
+
+
+@audit_pass("JXP001")
+def check_collectives(trace, spec) -> List[AuditFinding]:
+    findings: List[AuditFinding] = []
+    if spec.collectives is not None:
+        counts = count_primitives(trace.jaxpr(), COLLECTIVE_PRIMS)
+        for prim in COLLECTIVE_PRIMS:
+            expected = spec.collectives.get(prim, 0)
+            actual = counts[prim]
+            if not _expect_ok(expected, actual):
+                findings.append(AuditFinding(
+                    spec.name, "JXP001",
+                    f"jaxpr contains {actual} `{prim}` (expected "
+                    f"{expected})",
+                    hint="a collective appeared/disappeared in the "
+                         "traced program — check the reduce mode and "
+                         "shard_map body; `reduce='exact'` must "
+                         "all-gather (never psum), `reduce='psum'` "
+                         "runs exactly one psum per reduction"))
+        unknown = sorted(
+            set(spec.collectives) - set(COLLECTIVE_PRIMS))
+        if unknown:
+            findings.append(AuditFinding(
+                spec.name, "JXP001",
+                f"contract names unknown collective primitive(s) "
+                f"{unknown}",
+                hint=f"known: {COLLECTIVE_PRIMS}"))
+    if spec.hlo_collectives is not None:
+        found = sorted(set(_HLO_COLLECTIVE_RE.findall(
+            trace.compiled_text())))
+        extra = [op for op in found if op not in spec.hlo_collectives]
+        if extra:
+            findings.append(AuditFinding(
+                spec.name, "JXP001",
+                f"compiled HLO contains unexpected collective(s) "
+                f"{extra} (allowed: {sorted(spec.hlo_collectives)})",
+                hint="GSPMD inserted a collective the contract does "
+                     "not allow — inspect the input shardings and "
+                     "out_shardings of the jitted step; an accidental "
+                     "replication<->shard flip shows up here first"))
+    return findings

@@ -1,0 +1,41 @@
+"""JXP004 — donation audit.
+
+``donate_argnums`` is a *request*: XLA only honors it when a donated
+input buffer can alias some output (same shape/dtype/layout).  A
+refactor that changes an output shape — or moves the donated arg behind
+a copy — silently degrades to "allocate both", doubling the round's
+plane memory without any error (jax emits a one-line warning that CI
+logs swallow).  This pass reads the lowered StableHLO: every donated
+buffer must carry a ``tf.aliasing_output`` attribute, one per donated
+array leaf.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from repro.analysis.jaxpr.passes import AuditFinding, audit_pass
+
+
+@audit_pass("JXP004")
+def check_donation(trace, spec) -> List[AuditFinding]:
+    program = trace.program
+    if not program.donate_argnums:
+        return []
+    expected = sum(
+        len(jax.tree_util.tree_leaves(program.args[i]))
+        for i in program.donate_argnums)
+    actual = trace.lowered_text().count("tf.aliasing_output")
+    if actual == expected:
+        return []
+    return [AuditFinding(
+        spec.name, "JXP004",
+        f"{actual} of {expected} donated buffer(s) are aliased in the "
+        f"lowered executable (donate_argnums="
+        f"{program.donate_argnums})",
+        hint="an unusable donation silently allocates input AND output "
+             "— check that every donated leaf's shape/dtype matches an "
+             "output (the plane stack must flow through unreshaped) "
+             "and that no host-side copy sits between the caller and "
+             "the jit boundary")]

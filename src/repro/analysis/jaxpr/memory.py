@@ -1,0 +1,111 @@
+"""JXP003 — memory estimator.
+
+Two bounds:
+
+* **peak live bytes** — a liveness sweep over the traced jaxpr: walk
+  equations in order, allocate each output aval, free a value after its
+  last use, and track the high-water mark.  Loop/call bodies contribute
+  ``max(body peak)`` on top of the bytes live at their call site (one
+  iteration resident at a time — the scan/while execution model).  The
+  estimate ignores XLA fusion (which only *lowers* residency), so it is
+  a sound upper bound for catching the failure class that matters:
+  an accidentally materialized cross product (e.g. a ``(G, D, R, LANE)``
+  broadcast) explodes the estimate even at audit's tiny shapes.
+* **TilePlan budgets** — for each declared ``(R, L, n_operands, dtype,
+  backend)`` the pass re-derives the kernel grid's
+  :class:`~repro.kernels.tiling.TilePlan` and checks its double-buffered
+  resident block bytes against the VMEM/SMEM budget that sized it
+  (``MEMORY_BUDGET_BYTES``) — the regression gate for anyone retuning
+  ``DOUBLE_BUFFER``/``ROW_CAP`` or the budget table itself.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.jaxpr.passes import (AuditFinding, audit_pass,
+                                         aval_bytes, subjaxprs)
+
+try:
+    from jax.extend import core as _core
+    _ = (_core.Jaxpr, _core.ClosedJaxpr)
+except (ImportError, AttributeError):           # pragma: no cover
+    from jax import core as _core               # type: ignore[no-redef]
+
+
+def estimate_peak_bytes(jaxpr) -> int:
+    """Estimated peak live bytes of one jaxpr (see module docstring)."""
+    if isinstance(jaxpr, _core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    last_use: Dict[object, int] = {}
+    for i, eqn in enumerate(jaxpr.eqns):
+        for var in eqn.invars:
+            if not isinstance(var, _core.Literal):
+                last_use[var] = i
+    for var in jaxpr.outvars:
+        if not isinstance(var, _core.Literal):
+            last_use[var] = len(jaxpr.eqns)
+    sizes: Dict[object, int] = {
+        v: aval_bytes(v.aval)
+        for v in list(jaxpr.invars) + list(jaxpr.constvars)}
+    current = sum(sizes.values())
+    peak = current
+    for i, eqn in enumerate(jaxpr.eqns):
+        inner = max((estimate_peak_bytes(sub) for sub in subjaxprs(eqn)),
+                    default=0)
+        peak = max(peak, current + inner)
+        for var in eqn.outvars:
+            size = aval_bytes(var.aval)
+            sizes[var] = size
+            current += size
+        peak = max(peak, current)
+        for var, size in list(sizes.items()):
+            if last_use.get(var, -1) <= i:
+                current -= size
+                del sizes[var]
+    return peak
+
+
+def _fmt(n: int) -> str:
+    if n >= 1 << 20:
+        return f"{n / (1 << 20):.2f} MiB"
+    return f"{n / 1024:.1f} KiB"
+
+
+@audit_pass("JXP003")
+def check_memory(trace, spec) -> List[AuditFinding]:
+    findings: List[AuditFinding] = []
+    if spec.memory_budget_bytes is not None:
+        peak = estimate_peak_bytes(trace.jaxpr())
+        if peak > spec.memory_budget_bytes:
+            findings.append(AuditFinding(
+                spec.name, "JXP003",
+                f"estimated peak live bytes {_fmt(peak)} exceed the "
+                f"contract budget {_fmt(spec.memory_budget_bytes)}",
+                hint="an intermediate materializes a cross product the "
+                     "contract's tiny shapes should never produce — "
+                     "look for a broadcast that should be an einsum/"
+                     "scan carry, or raise the budget with a comment "
+                     "if the growth is intentional"))
+    if spec.tile_plans:
+        # lazy: keeps this module import-light for the RPA007 graph
+        import jax.numpy as jnp
+        from repro.kernels.tiling import MEMORY_BUDGET_BYTES, plan_tiles
+        for entry in spec.tile_plans:
+            rows, lanes, n_operands, dtype, backend = entry
+            plan = plan_tiles(rows, lanes, n_operands=n_operands,
+                              dtype=jnp.dtype(dtype), backend=backend)
+            budget = MEMORY_BUDGET_BYTES.get(backend)
+            if budget is None:
+                continue
+            block = plan.block_bytes(n_operands, jnp.dtype(dtype))
+            if block > budget:
+                findings.append(AuditFinding(
+                    spec.name, "JXP003",
+                    f"TilePlan({rows}x{lanes}, {n_operands} operands, "
+                    f"{dtype}, {backend}) resident block {_fmt(block)} "
+                    f"exceeds the {backend} budget {_fmt(budget)}",
+                    hint="plan_tiles sized a grid that no longer fits "
+                         "its memory space — re-check DOUBLE_BUFFER/"
+                         "ROW_CAP and MEMORY_BUDGET_BYTES in "
+                         "kernels/tiling.py"))
+    return findings

@@ -1,4 +1,4 @@
-"""The JAX lint rules (RPA001-RPA008), distilled from PR 1-5 incidents.
+"""The JAX lint rules (RPA001-RPA010), distilled from PR 1-7 incidents.
 
 Each rule is a heuristic AST pass.  The common machinery:
 
@@ -80,6 +80,24 @@ RULES: Dict[str, Rule] = {r.code: r for r in [
          "use the jnp.* equivalent; np.* forces the tracer to concretize "
          "(TracerArrayConversionError) or silently computes on stale "
          "host copies"),
+    Rule("RPA009", "callback-in-hot-scan",
+         "a host callback (pure_callback / io_callback / jax.debug.print "
+         "/ jax.debug.callback / id_tap) inside a lax.scan / fori_loop / "
+         "while_loop body",
+         "hoist the callback out of the loop or accumulate into the "
+         "carry and report after the loop; a per-iteration host "
+         "round-trip serializes the scan and blocks fusion (the jaxpr "
+         "twin is audit pass JXP005)"),
+    Rule("RPA010", "f64-literal-promotion",
+         "a float-literal jnp constructor (array/asarray of a float "
+         "list/tuple, linspace/logspace/geomspace) without an explicit "
+         "dtype",
+         "pin the dtype: `jnp.array([0.5], dtype=jnp.float32)`; bare "
+         "float-list literals are STRONG-typed and become f64 the "
+         "moment jax_enable_x64 flips, widening the whole downstream "
+         "graph (the jaxpr twin is audit pass JXP002; Python scalars — "
+         "including `jnp.full(shape, 0.5)` fills — stay weak-typed and "
+         "are fine)"),
 ]}
 
 
@@ -98,6 +116,8 @@ _TRACE_ENTRY = {"jit", "vmap", "pmap", "grad", "value_and_grad",
                 "jacfwd", "jacrev", "hessian", "checkpoint", "remat"}
 _LAX_BODY = {"scan", "while_loop", "cond", "fori_loop", "switch", "map",
              "associative_scan", "custom_root", "custom_linear_solve"}
+_LOOP_PRIMS = {"scan", "while_loop", "fori_loop", "map",
+               "associative_scan"}       # bodies run per iteration
 _STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval",
                  "weak_type"}
 _STATIC_CALLS = {"len", "isinstance", "issubclass", "hasattr", "getattr",
@@ -188,6 +208,18 @@ class _Aliases:
         head, _, rest = q.partition(".")
         return rest if head in self.np and "." not in rest else None
 
+    def is_jnp_call(self, q: Optional[str]) -> Optional[str]:
+        """If ``q`` is ``jnp.<fn>`` / ``jax.numpy.<fn>``, return ``<fn>``."""
+        if not q or "." not in q:
+            return None
+        head, _, rest = q.partition(".")
+        if head in self.jnp and "." not in rest:
+            return rest
+        if head in self.jax and rest.startswith("numpy."):
+            tail = rest[len("numpy."):]
+            return tail if "." not in tail else None
+        return None
+
     def is_random_call(self, q: Optional[str]) -> Optional[str]:
         """If ``q`` is ``jax.random.<fn>`` (any alias), return ``<fn>``."""
         if not q:
@@ -250,6 +282,8 @@ class _Module:
                 self.functions.setdefault(node.name, node)
         self.traced: Dict[ast.AST, Set[str]] = {}   # fn node -> static args
         self.jitted_names: Set[str] = set()  # names bound to jitted callables
+        self.loop_bodies: Set[ast.AST] = set()  # fn nodes that run per
+        #   iteration of a lax loop (scan/fori/while/map/associative_scan)
         self._find_traced()
 
     def _is_jit_decorator(self, dec: ast.AST) -> bool:
@@ -302,14 +336,35 @@ class _Module:
                         if inner and "." not in inner:
                             self._mark(inner, static)
             elif al.lax_body_call(q):
-                bodies = node.args[:2] if q and q.endswith("while_loop") \
-                    else node.args[:1]
+                prim = q.rpartition(".")[2]
+                if prim == "while_loop":
+                    bodies = list(node.args[:2])
+                elif prim == "fori_loop":
+                    # fori_loop(lower, upper, body_fun, init) — the body
+                    # is the THIRD positional (args[:1] would mark
+                    # `lower`, a silent no-op)
+                    bodies = list(node.args[2:3])
+                elif prim == "switch":
+                    bodies = [e for a in node.args[1:2]
+                              for e in (a.elts if isinstance(
+                                  a, (ast.List, ast.Tuple)) else [a])]
+                else:
+                    bodies = list(node.args[:1])
+                bodies += [kw.value for kw in node.keywords
+                           if kw.arg in ("f", "body_fun", "cond_fun",
+                                         "body", "fn")]
+                is_loop = prim in _LOOP_PRIMS
                 for b in bodies:
                     bq = _qualname(b)
+                    target = None
                     if bq and "." not in bq:
                         self._mark(bq)
+                        target = self.functions.get(bq)
                     elif isinstance(b, ast.Lambda):
                         self._mark(b)
+                        target = b
+                    if is_loop and target is not None:
+                        self.loop_bodies.add(target)
         # names bound to jitted callables: g = jax.jit(f, ...)
         for node in ast.walk(self.tree):
             if isinstance(node, ast.Assign) and isinstance(
@@ -333,6 +388,23 @@ class _Module:
                             callee = self.functions[cq]
                             if callee not in self.traced:
                                 self._mark(callee)
+                                changed = True
+        # 4. loop-body closure: a function called from a per-iteration
+        #    body runs per iteration too (RPA009 scope)
+        changed = True
+        while changed:
+            changed = False
+            for fn in list(self.loop_bodies):
+                body = fn.body if isinstance(
+                    fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    else [fn.body]
+                for node in (n for stmt in body for n in ast.walk(stmt)):
+                    if isinstance(node, ast.Call):
+                        cq = _qualname(node.func)
+                        if cq and "." not in cq and cq in self.functions:
+                            callee = self.functions[cq]
+                            if callee not in self.loop_bodies:
+                                self.loop_bodies.add(callee)
                                 changed = True
 
 
@@ -718,6 +790,87 @@ def _check_dataclass_pytree(mod: _Module,
                         f"static) nor pytree-registered"))
 
 
+_CALLBACK_TAILS = {"pure_callback", "io_callback", "id_tap", "id_print"}
+_DEBUG_TAILS = {("debug", "print"), ("debug", "callback"),
+                ("debug", "breakpoint")}
+
+
+def _check_loop_callbacks(mod: _Module,
+                          findings: List[RawFinding]) -> None:
+    """RPA009: host callbacks inside per-iteration lax loop bodies."""
+    seen: Set[Tuple[int, int]] = set()
+    for fn in mod.loop_bodies:
+        body = fn.body if isinstance(fn, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)) \
+            else [fn.body]
+        for node in (n for stmt in body for n in ast.walk(stmt)):
+            if not isinstance(node, ast.Call):
+                continue
+            q = _qualname(node.func)
+            if not q:
+                continue
+            parts = q.split(".")
+            if parts[-1] in _CALLBACK_TAILS or \
+                    tuple(parts[-2:]) in _DEBUG_TAILS:
+                key = (node.lineno, node.col_offset)
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(RawFinding(
+                        node.lineno, node.col_offset, "RPA009",
+                        f"`{q}` runs a host round-trip on EVERY "
+                        f"iteration of a lax loop body"))
+
+
+# dtype's positional slot; `full` is deliberately absent — a Python-
+# scalar fill keeps the result WEAK-typed (verified on jax 0.4.37), so
+# it cannot widen anything
+_RPA010_DTYPE_POS = {"array": 1, "asarray": 1}
+_RPA010_FACTORIES = {"linspace", "logspace", "geomspace"}
+
+
+def _float_literal_in(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Constant) and isinstance(n.value, float)
+               for n in ast.walk(node))
+
+
+def _check_f64_literals(mod: _Module,
+                        findings: List[RawFinding]) -> None:
+    """RPA010: strong-typed float literals with no explicit dtype.
+
+    Module-wide (not just traced scopes): a bare float-list constant
+    anywhere becomes a strong f64 under ``jax_enable_x64`` and widens
+    whatever consumes it.  Python scalars (and ``jnp.asarray(0.5)`` of
+    one) stay weak-typed and are deliberately NOT flagged.
+    """
+    al = mod.aliases
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn_name = al.is_jnp_call(_qualname(node.func))
+        if fn_name is None:
+            continue
+        if any(kw.arg == "dtype" for kw in node.keywords):
+            continue
+        if fn_name in _RPA010_DTYPE_POS:
+            if len(node.args) > _RPA010_DTYPE_POS[fn_name]:
+                continue            # dtype passed positionally
+            literal = bool(node.args) and isinstance(
+                node.args[0], (ast.List, ast.Tuple)) and \
+                _float_literal_in(node.args[0])
+            if literal:
+                findings.append(RawFinding(
+                    node.lineno, node.col_offset, "RPA010",
+                    f"`{fn_name}` of a float literal without dtype is "
+                    f"STRONG-typed: it becomes f64 and widens the "
+                    f"graph under jax_enable_x64"))
+        elif fn_name in _RPA010_FACTORIES and any(
+                _float_literal_in(a) for a in node.args):
+            findings.append(RawFinding(
+                node.lineno, node.col_offset, "RPA010",
+                f"`{fn_name}` with float-literal bounds and no dtype "
+                f"defaults to f64 under jax_enable_x64"))
+
+
 # -------------------------------------------------------- module pass --
 
 def module_findings(tree: ast.Module) -> List[RawFinding]:
@@ -728,6 +881,8 @@ def module_findings(tree: ast.Module) -> List[RawFinding]:
     _check_prng(mod, findings)
     _check_static_args(mod, findings)
     _check_dataclass_pytree(mod, findings)
+    _check_loop_callbacks(mod, findings)
+    _check_f64_literals(mod, findings)
     findings.sort(key=lambda f: (f.line, f.col, f.code))
     return findings
 

@@ -125,6 +125,44 @@ def robust_aggregate(x_t, d_list: List, *, theta: float, eta: float,
             xl, jnp.stack(dl), theta * eta, **kw), x_t, *d_list)
 
 
+def _robust_agg_program():
+    import functools
+    x = jnp.zeros((8, 1024), jnp.float32)
+    d_stack = jnp.ones((5, 8, 1024), jnp.float32)
+    fn = jax.jit(functools.partial(
+        ops.robust_aggregate_plane, mode="trimmed_mean", trim_frac=0.2,
+        backend="cpu"))
+    return Program(fn=fn, args=(x, d_stack,
+                                jnp.asarray(0.05, jnp.float32)))
+
+
+from repro.analysis.jaxpr.contracts import Program, contract  # noqa: E402
+
+
+@contract(
+    "robust_aggregation",
+    collectives={},
+    memory_budget_bytes=2 << 20,
+)
+def _robust_aggregation_contract():
+    """Coordinate-wise trimmed-mean eq.-11 on a tiny plane stack."""
+    return _robust_agg_program()
+
+
+@contract(
+    "fedprox_plane_bf16",
+    collectives={},
+    out_dtypes=("bfloat16",),
+)
+def _fedprox_bf16_contract():
+    """bf16 leaf round-trip: the fused proximal step must return bf16
+    when fed bf16 planes (weak Python-float eta/mu keep it narrow)."""
+    x = jnp.ones((8, 1024), jnp.bfloat16)
+    fn = jax.jit(lambda p, g, a: ops.fedprox_plane(p, g, a, 0.1, 0.01,
+                                                   backend="cpu"))
+    return Program(fn=fn, args=(x, x, x))
+
+
 def robust_fedavg_aggregate(local_params: List, *,
                             mode: str = "trimmed_mean",
                             trim_frac: float = 0.1):

@@ -935,3 +935,75 @@ class Engine:
             self.finish_round(state, staged, mean_loss, acc)
         return RunResult(reports=state.reports,
                          params=as_tree(state.params))
+
+
+# ---------------------------------------------------- trace contracts --
+
+from repro.analysis.jaxpr.contracts import Program, contract  # noqa: E402
+
+
+def _audit_micro_loss(p, micro, mask):
+    return fedprox._audit_loss(p, micro, mask), {}
+
+
+def _audit_mesh_round_args(n_dpu: int = 4, mb: int = 8,
+                           n_features: int = 4, n_classes: int = 3):
+    """Tiny (stack, batch, meta) triple in the exact mesh layout
+    ``MeshExecutor.run_round`` stages (batch leaves (n_dpu, n_micro=1,
+    mb, ...), absolute-size weights)."""
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.zeros((n_features, n_classes), jnp.float32),
+              "b": jnp.zeros((n_classes,), jnp.float32)}
+    stack = as_plane(params).broadcast(n_dpu)
+    batch = {"x": jnp.asarray(rng.normal(size=(n_dpu, 1, mb, n_features)),
+                              jnp.float32),
+             "y": jnp.asarray(rng.randint(0, n_classes,
+                                          size=(n_dpu, 1, mb)), jnp.int32)}
+    meta = {"gamma": jnp.full((n_dpu,), 2, jnp.int32),
+            "m_frac": jnp.ones((n_dpu,), jnp.float32),
+            "weight": jnp.full((n_dpu,), float(mb), jnp.float32)}
+    return stack, batch, meta
+
+
+_AUDIT_HYPER = CEFLHyper(eta=0.1, mu=0.01, theta=1.0, gamma_max=2,
+                         n_micro=1, kernel_backend="cpu")
+
+
+@contract(
+    "mesh_round_donation",
+    collectives={},
+)
+def _mesh_round_donation_contract():
+    """build_step donation: the (n_dpu, R, LANE) plane stack passed with
+    donate_argnums=(0,) must alias an output in the compiled step."""
+    stack, batch, meta = _audit_mesh_round_args()
+    step = build_cefl_round_step(_audit_micro_loss, _AUDIT_HYPER)
+    return Program(fn=step, args=(stack, batch, meta),
+                   donate_argnums=(0,))
+
+
+@contract(
+    "mesh_round_gspmd",
+    min_devices=8,
+    hlo_collectives=frozenset(
+        {"all-gather", "all-reduce", "collective-permute"}),
+)
+def _mesh_round_gspmd_contract():
+    """run_round mesh_shape path: GSPMD partitioning of the fused round
+    over the ('dpu', 'rows') plane mesh must introduce no collectives
+    beyond the gather/reduce/permute schedule of eq. 11."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import plane as shard_plane
+    from repro.sharding.specs import sanitize_spec
+
+    stack, batch, meta = _audit_mesh_round_args(n_dpu=4)
+    mesh = shard_plane.plane_mesh((4, 2))
+    spec = sanitize_spec(
+        P(shard_plane.DPU_AXIS, shard_plane.ROW_AXIS, None),
+        stack.data.shape, mesh)
+    stack = stack.with_data(jax.device_put(
+        stack.data, NamedSharding(mesh, spec)))
+    step = build_cefl_round_step(_audit_micro_loss, _AUDIT_HYPER)
+    return Program(fn=step, args=(stack, batch, meta))

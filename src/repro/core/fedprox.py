@@ -535,6 +535,73 @@ def local_train_multi(anchors, loss_fn: Callable, datasets, *, gamma: int,
         kernel_backend=kernel_backend)
 
 
+# ------------------------------------------------ trace-level contracts -----
+#
+# Registered for `python -m repro.analysis audit` (docs/static_analysis.md).
+# The builders below only run when the auditor traces them — registration
+# itself is a dict insert.
+
+def _audit_loss(params, batch, w):
+    """Pure-jnp weighted CE loss for contract tracing.  Deliberately no
+    jax.nn helpers: one_hot/log_softmax are internally jitted and
+    default to f64 under jax_enable_x64, which would pollute the
+    dtype (JXP002) and fusion-boundary (JXP005) audits with library
+    noise instead of auditing OUR round program."""
+    logits = batch["x"] @ params["w"] + params["b"]
+    s = logits - jax.lax.stop_gradient(
+        jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(s), axis=-1))
+    n_classes = logits.shape[-1]
+    one = (batch["y"][:, None] == jnp.arange(n_classes)[None, :])
+    ll = jnp.sum(s * one.astype(jnp.float32), axis=-1) - lse
+    return -jnp.sum(ll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def _audit_round_args(n_group: int = 2, n_examples: int = 8,
+                      n_features: int = 4, n_classes: int = 3,
+                      gamma: int = 2, m_frac: float = 1.0):
+    """Tiny staged fused-round arguments — the exact 10-tuple
+    ``local_round_plane`` feeds ``_plane_round_fn`` (shared with the
+    sharded-round and sweep contract builders)."""
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.zeros((n_features, n_classes), jnp.float32),
+              "b": jnp.zeros((n_classes,), jnp.float32)}
+    plane = as_plane(params)
+    datasets = [
+        {"x": jnp.asarray(rng.normal(size=(n_examples, n_features)),
+                          jnp.float32),
+         "y": jnp.asarray(rng.randint(0, n_classes, size=(n_examples,)),
+                          jnp.int32)}
+        for _ in range(n_group)]
+    Ds = [n_examples] * n_group
+    bucket = _bucket(batch_size(n_examples, m_frac))
+    a = a_coefficients(gamma, 0.1, 0.01)
+    step_keys = jax.vmap(lambda k: jax.random.split(k, gamma))(
+        jnp.stack([jax.random.PRNGKey(i) for i in range(n_group)]))
+    data_stack, idx, weights = _stage_group_batches(
+        datasets, step_keys, Ds, bucket, gamma, m_frac)
+    args = (plane.broadcast(n_group).data, plane.data, data_stack, idx,
+            weights, a, jnp.asarray(0.1, jnp.float32),
+            jnp.asarray(0.01, jnp.float32), jnp.asarray(Ds, jnp.float32),
+            jnp.asarray(0.1, jnp.float32))
+    return plane.spec, args
+
+
+from repro.analysis.jaxpr.contracts import Program, contract  # noqa: E402
+
+
+@contract(
+    "fused_round",
+    collectives={},                 # single-device: zero collectives
+    memory_budget_bytes=4 << 20,    # tiny shapes; ~0.6 MiB today
+)
+def _fused_round_contract():
+    """Single-group fused round: gamma-step train scan + eq.-10/11."""
+    spec, args = _audit_round_args()
+    return Program(fn=_plane_round_fn(_audit_loss, spec, "cpu", None),
+                   args=args)
+
+
 def verify_accumulation_identity(params0, result: LocalResult, *, eta, mu):
     """Check eq. (9): sum_l a_l grad F = (x^t - x^{t,gamma})/eta  holds only
     for mu=0 (with prox, the update uses grad g, not grad F).  Returns the

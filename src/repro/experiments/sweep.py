@@ -354,3 +354,25 @@ def get_sweep_executor(name: str, **kw) -> _LockstepSweep:
         raise KeyError(f"unknown sweep executor {name!r}; available: "
                        f"{sorted(_EXECUTORS)}") from None
     return cls(**kw)
+
+
+# ------------------------------------------------ trace-level contracts -----
+
+from repro.analysis.jaxpr.contracts import Program, contract  # noqa: E402
+
+
+@contract(
+    "sweep_multi_train",
+    collectives={},
+    memory_budget_bytes=4 << 20,
+)
+def _sweep_multi_train_contract():
+    """Cross-run batched training scan with per-element anchors — the
+    device program VmapSweepExecutor drives via local_train_multi."""
+    spec, args = fedprox._audit_round_args()
+    p0 = args[0]
+    # per-element anchor (G, R, LANE): the multi-run form
+    fn = fedprox._plane_train_fn(fedprox._audit_loss, spec,
+                                 batched_anchor=True,
+                                 kernel_backend="cpu")
+    return Program(fn=fn, args=(p0, p0) + args[2:8])

@@ -6,3 +6,18 @@ from repro.kernels import ops, plane, ref  # noqa: F401
 from repro.kernels.plane import (  # noqa: F401
     FlatSpec, ParamPlane, as_plane, as_tree, spec_of,
 )
+
+__all__ = [
+    "ops", "plane", "ref",
+    "FlatSpec", "ParamPlane", "as_plane", "as_tree", "spec_of",
+    "swa_decode_attention",
+]
+
+
+def __getattr__(name):
+    # serving-only kernel: loaded on first use so training imports never
+    # pay for (or fail on) the attention module
+    if name == "swa_decode_attention":
+        from repro.kernels.swa_decode_attention import swa_decode_attention
+        return swa_decode_attention
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -54,12 +54,22 @@ from repro.kernels import nova_aggregate as _na
 from repro.kernels import ref as _ref
 from repro.kernels import robust_aggregate as _ra
 from repro.kernels.plane import FlatSpec, ParamPlane, spec_of  # noqa: F401
-from repro.kernels.swa_decode_attention import swa_decode_attention  # noqa: F401
 from repro.kernels.tiling import TilePlan, plan_tiles  # noqa: F401
+
+# NOTE: no serving-kernel imports here.  ops.py is on the import path of
+# every training module, and swa_decode_attention is a pure re-export
+# used only by serving callers — reach it via ``repro.kernels`` (lazy)
+# or the defining module.  Keeping ops import-light matters because
+# importing it initializes the jax backend (the device probe below),
+# which pins the device count before XLA_FLAGS overrides can land.
 
 BACKENDS = ("cpu", "interpret", "gpu", "tpu")
 
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+# module-level backend probe: jax.default_backend() initializes the
+# platform client (the probe below and the _BACKEND default share it);
+# deliberately NOT jax.devices() — the platform name is enough and the
+# device list is not needed at import time
+_ON_TPU = jax.default_backend() == "tpu"
 # Back-compat alias (pre-dispatch callers flag-check this): interpret-or-
 # equivalent is the right default everywhere except on real TPUs.
 INTERPRET = not _ON_TPU

@@ -340,3 +340,72 @@ def local_round_plane_sharded(params, loss_fn, datasets, *, gamma: int,
     mean_loss = np.asarray(losses).mean(axis=0)
     return (plane.with_data(new_data), mean_loss,
             None if eval_fn is None else float(acc))
+
+
+# ---------------------------------------------------- trace contracts --
+
+from repro.analysis.jaxpr.contracts import Program, contract  # noqa: E402
+
+
+def _audit_nova_args(mesh: Mesh):
+    x = jnp.zeros((8, 1024), jnp.float32)
+    d_stack = jnp.ones((4, 8, 1024), jnp.float32)
+    weights = jnp.full((4,), 0.25, jnp.float32)
+    return (x, d_stack, weights, jnp.asarray(0.05, jnp.float32))
+
+
+@contract(
+    "nova_sharded_exact",
+    min_devices=8,
+    collectives={"all_gather": 2, "psum": 0},
+)
+def _nova_exact_contract():
+    """reduce="exact" eq.-11: gathers the d-stack + weights over 'dpu'
+    and reduces locally — bitwise path, so psum MUST NOT appear."""
+    mesh = plane_mesh((4, 2))
+    return Program(fn=_nova_fn(mesh, "cpu", "exact"),
+                   args=_audit_nova_args(mesh))
+
+
+@contract(
+    "nova_sharded_psum",
+    min_devices=8,
+    collectives={"psum": 1, "all_gather": 0},
+)
+def _nova_psum_contract():
+    """reduce="psum" eq.-11: local partial weighted sums combined by
+    EXACTLY ONE psum over 'dpu' (allclose path)."""
+    mesh = plane_mesh((4, 2))
+    return Program(fn=_nova_fn(mesh, "cpu", "psum"),
+                   args=_audit_nova_args(mesh))
+
+
+def _audit_sharded_round_program(reduce: str) -> Program:
+    from repro.core import fedprox as _fp
+    mesh = plane_mesh((4, 2))
+    spec, args = _fp._audit_round_args(n_group=4)
+    fn = _sharded_round_fn(_fp._audit_loss, spec, mesh, "cpu",
+                           reduce=reduce)
+    return Program(fn=fn, args=args)
+
+
+@contract(
+    "sharded_round_exact",
+    min_devices=8,
+    collectives={"psum": 0, "all_gather": "1+"},
+)
+def _sharded_round_exact_contract():
+    """FSDP-shaped sharded round, reduce="exact": row/dpu all-gathers
+    only — the bitwise twin of the fused single-device round."""
+    return _audit_sharded_round_program("exact")
+
+
+@contract(
+    "sharded_round_psum",
+    min_devices=8,
+    collectives={"psum": 1, "all_gather": "1+"},
+)
+def _sharded_round_psum_contract():
+    """Sharded round, reduce="psum": exactly one eq.-11 psum over 'dpu'
+    on top of the FSDP row gathers."""
+    return _audit_sharded_round_program("psum")

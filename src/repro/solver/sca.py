@@ -169,3 +169,46 @@ def solve(net, D_bar, consts: MLConstants, ow: ObjectiveWeights,
     return _solve_jit(net, D_bar, consts, ow, zeta=zeta,
                       max_outer=max_outer, tol=tol, pd=pd,
                       distributed=distributed, w0=w0)
+
+
+# ----------------------------------------------------- trace contract --
+
+from repro.analysis.jaxpr.contracts import Program, contract  # noqa: E402
+
+
+@contract(
+    "solver_sca_step",
+    collectives={},
+    forbid_f64=False,   # outer step mixes np host constants by design
+    # jnp.sort/cumsum (simplex projections) are internally jitted
+    # single-eqn helpers in jax 0.4.37 — library noise, not our nesting
+    fusion_allow=("sort", "cumsum"),
+)
+def _sca_step_contract():
+    """One centralized SCA outer iteration on a 6-UE/3-BS/2-DC net."""
+    from repro.core.convergence import MLConstants
+    from repro.network import NetworkConfig, make_network
+
+    net = make_network(NetworkConfig(num_ue=6, num_bs=3, num_dc=2, seed=0))
+    D_bar = np.full(6, 1000.0)
+    consts = MLConstants(L=4.0, theta_i=np.ones(8) * 2,
+                         sigma_i=np.ones(8), zeta1=2.0, zeta2=1.0)
+    ow = ObjectiveWeights()
+    pd = PDHyper(max_iters=2, consensus_rounds=2)
+
+    # mirror the _solve_jit staging (host-side, once)
+    spec = V.WSpec(net.dims)
+    nv = V.NetView.from_network(net)
+    scale_flat = V.Scaler(net).flat(spec)
+    D_j = jnp.asarray(D_bar, jnp.float32)
+    theta_i = jnp.asarray(consts.theta_i, jnp.float32)
+    sigma_i = jnp.asarray(consts.sigma_i, jnp.float32)
+    W_cons = jnp.zeros((1, 1), jnp.float32)
+    Lambda = jnp.zeros((1, K.num_constraints(spec.dims)), jnp.float32)
+    w_phys = V.project(V.init_w(net, D_bar), net)
+    w_phys = apply_required_deltas(w_phys, net, D_bar, slack=1.05)
+    w = spec.flatten(w_phys) / scale_flat
+    step = _outer_step(spec.dims, pd, ow, _consts_scalars(consts),
+                       False, 0.5)
+    return Program(fn=step, args=(w, Lambda, nv, D_j, theta_i, sigma_i,
+                                  scale_flat, W_cons))

@@ -1,0 +1,245 @@
+"""Trace-level program auditor (repro.analysis.jaxpr): each pass must
+catch its planted violation (known-bad), stay silent on the clean twin
+(known-good), and the audit over the repo's registered contracts must be
+violation-free.  The exact-vs-psum distinguishability gate runs when 8
+devices are available (the CI audit lane forces 8 virtual CPUs)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.jaxpr import ContractSpec, Program
+from repro.analysis.jaxpr.audit import audit_contract, run_audit
+
+pytestmark = pytest.mark.filterwarnings("ignore::UserWarning")
+
+
+def _spec(name, build, **kw):
+    return ContractSpec(name=name, build=build, module=__name__, **kw)
+
+
+def _codes(report):
+    return {f.pass_id for f in report.violations}
+
+
+# ------------------------------------------------- JXP001 collectives --
+
+def _psum_program():
+    # single-device psum: vmap with an axis name makes lax.psum traceable
+    fn = jax.jit(jax.vmap(lambda x: jax.lax.psum(x, "i"), axis_name="i"))
+    return Program(fn=fn, args=(jnp.ones((4, 8), jnp.float32),))
+
+
+def test_collective_audit_flags_planted_psum():
+    spec = _spec("planted_psum", _psum_program, collectives={"psum": 0})
+    report = audit_contract(spec, pass_ids=["JXP001"])
+    assert "JXP001" in _codes(report)
+
+
+def test_collective_audit_accepts_declared_psum():
+    spec = _spec("declared_psum", _psum_program,
+                 collectives={"psum": 1})
+    assert not audit_contract(spec, pass_ids=["JXP001"]).violations
+
+
+def test_collective_audit_unmentioned_prims_expected_absent():
+    # zero-surprise default: a psum with only all_gather declared fails
+    spec = _spec("surprise_psum", _psum_program,
+                 collectives={"all_gather": 0})
+    assert "JXP001" in _codes(audit_contract(spec, pass_ids=["JXP001"]))
+
+
+def test_collective_audit_at_least_syntax():
+    spec = _spec("atleast", _psum_program, collectives={"psum": "1+"})
+    assert not audit_contract(spec, pass_ids=["JXP001"]).violations
+
+
+# ------------------------------------------------------ JXP002 dtypes --
+
+def test_dtype_audit_flags_planted_f64_literal():
+    def build():
+        # strong float-list literal: becomes f64 under the x64 probe
+        fn = jax.jit(lambda x: x * jnp.array([0.5, 2.0]))
+        return Program(fn=fn, args=(jnp.ones((2,), jnp.float32),))
+
+    spec = _spec("planted_f64", build)
+    assert "JXP002" in _codes(audit_contract(spec, pass_ids=["JXP002"]))
+
+
+def test_dtype_audit_accepts_weak_scalars():
+    def build():
+        # Python scalars and pinned-dtype constants stay narrow
+        fn = jax.jit(lambda x: x * 0.5 + jnp.array([1.0], jnp.float32))
+        return Program(fn=fn, args=(jnp.ones((2,), jnp.float32),))
+
+    spec = _spec("weak_ok", build)
+    assert not audit_contract(spec, pass_ids=["JXP002"]).violations
+
+
+def test_dtype_audit_checks_declared_out_dtypes():
+    def build():
+        fn = jax.jit(lambda x: x.astype(jnp.float32))   # widens bf16
+        return Program(fn=fn, args=(jnp.ones((4,), jnp.bfloat16),))
+
+    spec = _spec("bf16_widened", build, out_dtypes=("bfloat16",),
+                 forbid_f64=False)
+    assert "JXP002" in _codes(audit_contract(spec, pass_ids=["JXP002"]))
+
+
+# ------------------------------------------------------ JXP003 memory --
+
+def test_memory_audit_flags_budget_blowout():
+    def build():
+        def fn(x):
+            big = jnp.outer(x, x)               # (1024, 1024) f32 = 4 MiB
+            return jnp.sum(big)
+        return Program(fn=jax.jit(fn),
+                       args=(jnp.ones((1024,), jnp.float32),))
+
+    spec = _spec("blowout", build, memory_budget_bytes=1 << 16)
+    assert "JXP003" in _codes(audit_contract(spec, pass_ids=["JXP003"]))
+
+
+def test_memory_audit_accepts_within_budget():
+    def build():
+        return Program(fn=jax.jit(lambda x: jnp.sum(x * 2)),
+                       args=(jnp.ones((1024,), jnp.float32),))
+
+    spec = _spec("small", build, memory_budget_bytes=1 << 16)
+    assert not audit_contract(spec, pass_ids=["JXP003"]).violations
+
+
+# ---------------------------------------------------- JXP004 donation --
+
+def test_donation_audit_flags_undonatable_buffer():
+    def build():
+        # no output matches the donated input's shape -> XLA cannot
+        # alias it; the donation silently buys nothing
+        fn = jax.jit(lambda p, g: jnp.sum(p + g), donate_argnums=(0,))
+        return Program(fn=fn, args=(jnp.ones((8, 128), jnp.float32),
+                                    jnp.ones((8, 128), jnp.float32)),
+                       donate_argnums=(0,))
+
+    spec = _spec("undonated", build)
+    assert "JXP004" in _codes(audit_contract(spec, pass_ids=["JXP004"]))
+
+
+def test_donation_audit_accepts_aliased_buffer():
+    def build():
+        fn = jax.jit(lambda p, g: p - 0.1 * g, donate_argnums=(0,))
+        return Program(fn=fn, args=(jnp.ones((8, 128), jnp.float32),
+                                    jnp.ones((8, 128), jnp.float32)),
+                       donate_argnums=(0,))
+
+    spec = _spec("donated", build)
+    assert not audit_contract(spec, pass_ids=["JXP004"]).violations
+
+
+# ------------------------------------------------------ JXP005 fusion --
+
+def test_fusion_audit_flags_nested_jit_in_scan():
+    @jax.jit
+    def inner(x):
+        return x * 2.0 + 1.0
+
+    def build():
+        def body(c, x):
+            return c + inner(x), None           # pjit inside the scan
+
+        fn = jax.jit(lambda xs: jax.lax.scan(body, jnp.zeros(()), xs)[0])
+        return Program(fn=fn, args=(jnp.ones((16,), jnp.float32),))
+
+    spec = _spec("nested_jit", build)
+    assert "JXP005" in _codes(audit_contract(spec, pass_ids=["JXP005"]))
+
+
+def test_fusion_audit_accepts_inline_body():
+    def build():
+        def body(c, x):
+            return c + x * 2.0 + 1.0, None
+
+        fn = jax.jit(lambda xs: jax.lax.scan(body, jnp.zeros(()), xs)[0])
+        return Program(fn=fn, args=(jnp.ones((16,), jnp.float32),))
+
+    spec = _spec("inline_body", build)
+    assert not audit_contract(spec, pass_ids=["JXP005"]).violations
+
+
+def test_fusion_audit_allowlist():
+    @jax.jit
+    def inner(x):
+        return x * 2.0
+
+    def build():
+        def body(c, x):
+            return c + inner(x), None
+
+        fn = jax.jit(lambda xs: jax.lax.scan(body, jnp.zeros(()), xs)[0])
+        return Program(fn=fn, args=(jnp.ones((16,), jnp.float32),))
+
+    spec = _spec("allowed_inner", build, fusion_allow=("inner",))
+    assert not audit_contract(spec, pass_ids=["JXP005"]).violations
+
+
+# ----------------------------------------------------------- waivers --
+
+def test_waiver_reports_but_does_not_fail():
+    spec = _spec("waived_psum", _psum_program, collectives={"psum": 0},
+                 waivers={"JXP001": "known: exercised by this test"})
+    report = audit_contract(spec, pass_ids=["JXP001"])
+    assert report.findings and all(f.waived for f in report.findings)
+    assert not report.violations
+
+
+# ------------------------------------------- the repo's own contracts --
+
+def test_registered_contracts_audit_clean():
+    """The standing gate: every registered hot-path contract traces and
+    passes (sharded contracts skip below 8 devices, never fail)."""
+    report = run_audit()
+    traced = [c for c in report.contracts if not c.skipped]
+    assert len(traced) >= 5, [c.name for c in report.contracts]
+    for c in traced:
+        assert len(c.passes_run) >= 3, (c.name, c.passes_run)
+    assert report.ok, "\n".join(
+        f.render() for f in report.violations)
+
+
+def test_run_audit_unknown_contract_name_raises():
+    with pytest.raises(ValueError, match="unknown contract"):
+        run_audit(select=["no_such_contract"])
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (CI audit lane forces "
+                           "XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8)")
+def test_collective_audit_distinguishes_exact_from_psum():
+    """The PR-9 regression gate, now trace-enforced: the exact and psum
+    reduction modes of the sharded eq.-11 aggregation have provably
+    different collective schedules, and the audit can tell them apart."""
+    from repro.analysis.jaxpr.contracts import discover
+    registry = discover()
+    exact, psum = (registry["nova_sharded_exact"],
+                   registry["nova_sharded_psum"])
+    # each passes under its own expectations...
+    assert not audit_contract(exact, pass_ids=["JXP001"]).violations
+    assert not audit_contract(psum, pass_ids=["JXP001"]).violations
+    # ...and FAILS under the other's: the two jaxprs are distinguishable
+    import dataclasses
+    swapped_exact = dataclasses.replace(exact,
+                                        collectives=psum.collectives)
+    swapped_psum = dataclasses.replace(psum,
+                                       collectives=exact.collectives)
+    assert audit_contract(swapped_exact, pass_ids=["JXP001"]).violations
+    assert audit_contract(swapped_psum, pass_ids=["JXP001"]).violations
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices")
+def test_sharded_round_contracts_audit_clean():
+    report = run_audit(select=["sharded_round_exact",
+                               "sharded_round_psum",
+                               "mesh_round_gspmd"])
+    assert not any(c.skipped for c in report.contracts)
+    assert report.ok, "\n".join(
+        f.render() for f in report.violations)
